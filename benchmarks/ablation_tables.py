@@ -1,0 +1,67 @@
+"""Paper Fig. 12 + Table 4: MILP optimization ablations.
+
+(a) cluster pruning: problem size (vars/constraints) and resulting
+    throughput, 24-node and 42-node settings;
+(b) warm start: solver path with vs without heuristic incumbents
+    (LNS fix-and-reoptimize reproduces Gurobi's `Start` hint — §3.4 /
+    DESIGN.md substitutions).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (LLAMA_70B, MILPOptions, make_high_heterogeneity_cluster,
+                        make_single_cluster, solve_placement)
+from repro.core.milp import _build_problem
+
+from .common import emit
+
+
+def bench_ablation_pruning(quick: bool = False):
+    out = {}
+    budget = 10.0 if quick else 25.0
+    for cname, cluster in [("24node", make_single_cluster()),
+                           ("42node", make_high_heterogeneity_cluster())]:
+        for prune in (12, None):
+            opts = MILPOptions(time_limit_s=budget, lns_rounds=1,
+                               lns_time_limit_s=budget / 3,
+                               prune_degree=prune, fgls_rounds=40)
+            prob = _build_problem(cluster, LLAMA_70B, opts)
+            t0 = time.time()
+            res = solve_placement(cluster, LLAMA_70B, opts)
+            wall = time.time() - t0
+            label = "pruned" if prune else "full"
+            emit(f"tab4_{cname}_{label}_vars", wall, len(prob.reg))
+            emit(f"tab4_{cname}_{label}_constraints", wall,
+                 len(prob.cons.rows))
+            emit(f"fig12a_{cname}_{label}_tput", wall,
+                 f"{res.actual_throughput:.1f}")
+            out[(cname, label)] = (len(prob.reg), len(prob.cons.rows),
+                                   res.actual_throughput)
+    return out
+
+
+def bench_ablation_warmstart(quick: bool = False):
+    """Cold MILP vs heuristic-seeded (incumbent + LNS) under equal budget."""
+    out = {}
+    budget = 12.0 if quick else 30.0
+    for cname, cluster in [("24node", make_single_cluster())] + (
+            [] if quick else [("42node", make_high_heterogeneity_cluster())]):
+        t0 = time.time()
+        cold = solve_placement(cluster, LLAMA_70B, MILPOptions(
+            time_limit_s=budget, warm_start=False, lns_rounds=0,
+            fgls_rounds=0))
+        cold_tput = max((h["throughput"] for h in cold.meta["history"]
+                         if h["phase"] == "milp"), default=0.0)
+        cold_wall = time.time() - t0
+        t0 = time.time()
+        warm = solve_placement(cluster, LLAMA_70B, MILPOptions(
+            time_limit_s=budget / 2, lns_rounds=2,
+            lns_time_limit_s=budget / 4, fgls_rounds=40))
+        warm_wall = time.time() - t0
+        emit(f"fig12b_{cname}_cold_milp_tput", cold_wall,
+             f"{cold_tput:.1f}")
+        emit(f"fig12b_{cname}_warm_tput", warm_wall,
+             f"{warm.actual_throughput:.1f}")
+        out[cname] = (cold_tput, warm.actual_throughput)
+    return out

@@ -1,0 +1,104 @@
+"""Shared benchmark plumbing: method construction + simulated serving runs.
+
+Methods under comparison (paper §5.2-§5.7):
+  helix   — MILP/FGLS placement + max-flow IWRR scheduling (+KV estimation)
+  swarm   — equal-stage placement + throughput-proportional routing
+  sp      — separate homogeneous pipelines (+ mixed tail for SP+)
+  petals  — greedy least-covered placement (placement deep-dive only)
+  random  — random next-hop scheduling (scheduling deep-dive only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core import (COORDINATOR, ClusterSpec, MILPOptions, ModelProfile,
+                        Placement, RandomScheduler, SwarmScheduler,
+                        petals_placement, placement_throughput, plan,
+                        separate_pipelines_placement, solve_placement,
+                        swarm_placement)
+from repro.core.scheduler import HelixScheduler, KVEstimator
+from repro.sim import Simulator, make_offline_trace, make_trace
+from repro.sim.traces import online_rate_for_cluster
+
+FAST_MILP = MILPOptions(time_limit_s=15.0, lns_rounds=2, lns_time_limit_s=6.0,
+                        fgls_rounds=50, mip_rel_gap=0.05)
+
+
+def make_placement(method: str, cluster: ClusterSpec, model: ModelProfile,
+                   opts: Optional[MILPOptions] = None) -> Placement:
+    opts = opts or FAST_MILP
+    if method == "helix":
+        return solve_placement(cluster, model, opts).placement
+    if method == "swarm":
+        return swarm_placement(cluster, model)
+    if method == "petals":
+        return petals_placement(cluster, model)
+    if method == "sp":
+        return separate_pipelines_placement(cluster, model)
+    if method == "sp+":
+        return separate_pipelines_placement(cluster, model,
+                                            allow_mixed_tail=True)
+    raise ValueError(method)
+
+
+def make_scheduler(method: str, cluster, model, placement, flows,
+                   seed: int = 0):
+    kv = KVEstimator.from_placement(cluster, model, placement)
+    if method == "helix":
+        return HelixScheduler(cluster, model, placement, flows,
+                              kv_estimator=kv)
+    if method == "swarm":
+        return SwarmScheduler(cluster, model, placement, seed=seed)
+    if method == "random":
+        return RandomScheduler(cluster, model, placement, seed=seed)
+    raise ValueError(method)
+
+
+@dataclasses.dataclass
+class ServingResult:
+    method: str
+    decode_throughput: float
+    processed_throughput: float
+    prompt_latency: Dict[str, float]
+    decode_latency: Dict[str, float]
+    flow_bound: float
+    wall_s: float
+
+
+def run_serving(cluster: ClusterSpec, model: ModelProfile,
+                placement_method: str, scheduler_method: str,
+                *, offline: bool = True, num_requests: int = 400,
+                horizon_s: float = 240.0, warmup_s: float = 10.0,
+                seed: int = 0, decode_chunk: int = 4,
+                placement: Optional[Placement] = None,
+                opts: Optional[MILPOptions] = None) -> ServingResult:
+    t0 = time.time()
+    if placement is None:
+        placement = make_placement(placement_method, cluster, model, opts)
+    p = plan(cluster, model, placement=placement)
+    sched = make_scheduler(scheduler_method, cluster, model, placement,
+                           p.flows, seed=seed)
+    if offline:
+        trace = make_offline_trace(num_requests, seed=seed)
+    else:
+        rate = online_rate_for_cluster(p.throughput, utilization=0.75)
+        trace = make_trace(num_requests, arrival_rate_per_s=max(rate, 0.2),
+                           seed=seed)
+    sim = Simulator(cluster, model, placement, sched, warmup_s=warmup_s,
+                    horizon_s=horizon_s, decode_chunk=decode_chunk)
+    m = sim.run(trace)
+    return ServingResult(
+        method=f"{placement_method}/{scheduler_method}",
+        decode_throughput=m.decode_throughput,
+        processed_throughput=m.processed_throughput,
+        prompt_latency=m.prompt_latency,
+        decode_latency=m.decode_latency,
+        flow_bound=p.throughput,
+        wall_s=time.time() - t0)
+
+
+def emit(name: str, wall_s: float, derived) -> None:
+    """CSV row per bench: name,us_per_call,derived."""
+    print(f"{name},{wall_s * 1e6:.0f},{derived}", flush=True)

@@ -1,0 +1,76 @@
+"""Beyond-paper: fault-tolerance benchmarks.
+
+Node failure mid-run with elastic replanning, and straggler mitigation via
+flow reweighting — throughput retained vs a no-mitigation run.
+"""
+from __future__ import annotations
+
+from repro.core import (LLAMA_70B, MILPOptions, make_single_cluster, plan,
+                        replan_after_failure, reweight_for_straggler)
+from repro.sim import Simulator, make_offline_trace
+
+from .common import FAST_MILP, emit
+
+
+def bench_failover(quick: bool = False):
+    cluster = make_single_cluster()
+    p = plan(cluster, LLAMA_70B, FAST_MILP)
+    n_req = 200 if quick else 400
+
+    def run(with_replan: bool):
+        pp = plan(cluster, LLAMA_70B, placement=p.placement)
+        sched = pp.make_scheduler()
+        state = {"plan": pp}
+
+        def replan(dead):
+            new = replan_after_failure(
+                state["plan"], dead,
+                MILPOptions(time_limit_s=8.0, lns_rounds=0, fgls_rounds=30))
+            state["plan"] = new
+            return new.make_scheduler(), new.placement
+
+        sim = Simulator(cluster, LLAMA_70B, pp.placement, sched,
+                        warmup_s=10.0, horizon_s=240.0, decode_chunk=4,
+                        replan_fn=replan if with_replan else None)
+        # kill the strongest node mid-run
+        victim = max(pp.placement.assignment,
+                     key=lambda n: cluster.nodes[n].flops)
+        sim.fail_node(60.0, victim)
+        return sim.run(make_offline_trace(n_req, seed=5))
+
+    m_replan = run(True)
+    m_none = run(False)
+    emit("fault_failover_with_replan_tps", 0.0,
+         f"{m_replan.decode_throughput:.1f}")
+    emit("fault_failover_no_replan_tps", 0.0,
+         f"{m_none.decode_throughput:.1f}")
+    emit("fault_failover_restarts", 0.0, m_replan.restarts)
+    return m_replan, m_none
+
+
+def bench_straggler(quick: bool = False):
+    cluster = make_single_cluster()
+    p = plan(cluster, LLAMA_70B, FAST_MILP)
+    n_req = 200 if quick else 400
+    victim = max(p.placement.assignment,
+                 key=lambda n: cluster.nodes[n].flops)
+
+    def run(mitigate: bool):
+        pp = plan(cluster, LLAMA_70B, placement=p.placement)
+        sched = pp.make_scheduler()
+        sim = Simulator(cluster, LLAMA_70B, pp.placement, sched,
+                        warmup_s=10.0, horizon_s=240.0, decode_chunk=4)
+        sim.slow_node(30.0, victim, 0.15)
+        if mitigate:
+            # detection: reweight flows on the degraded graph at t=60
+            degraded = reweight_for_straggler(pp, victim, 0.15)
+            sim._push(60.0, lambda: sched.update_weights(degraded.flows))
+        return sim.run(make_offline_trace(n_req, seed=6))
+
+    m_yes = run(True)
+    m_no = run(False)
+    emit("fault_straggler_mitigated_tps", 0.0,
+         f"{m_yes.decode_throughput:.1f}")
+    emit("fault_straggler_unmitigated_tps", 0.0,
+         f"{m_no.decode_throughput:.1f}")
+    return m_yes, m_no

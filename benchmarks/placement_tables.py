@@ -1,0 +1,35 @@
+"""Paper Fig. 10: model placement deep dive.
+
+Isolates placement from scheduling: Helix vs Petals vs Swarm placements all
+served with Helix's scheduler (as in §5.6), LLaMA-70B offline, single and
+distributed clusters.
+"""
+from __future__ import annotations
+
+from repro.core import (LLAMA_70B, make_distributed_cluster,
+                        make_single_cluster, placement_throughput)
+
+from .common import emit, make_placement, run_serving
+
+
+def bench_placement_deepdive(quick: bool = False):
+    out = {}
+    n_req = 150 if quick else 300
+    for cname, cluster in [("single", make_single_cluster()),
+                           ("dist", make_distributed_cluster())]:
+        rows = {}
+        for pm in ("helix", "petals", "swarm"):
+            placement = make_placement(pm, cluster, LLAMA_70B)
+            bound = placement_throughput(cluster, LLAMA_70B, placement)
+            r = run_serving(cluster, LLAMA_70B, pm, "helix", offline=True,
+                            num_requests=n_req, placement=placement)
+            rows[pm] = r
+            emit(f"fig10_{cname}_{pm}_decode_tps", r.wall_s,
+                 f"{r.decode_throughput:.1f}")
+            emit(f"fig10_{cname}_{pm}_flow_bound_tps", 0.0, f"{bound:.1f}")
+        for other in ("petals", "swarm"):
+            ratio = rows["helix"].decode_throughput / max(
+                rows[other].decode_throughput, 1e-9)
+            emit(f"fig10_{cname}_helix_vs_{other}_ratio", 0.0, f"{ratio:.2f}")
+        out[cname] = rows
+    return out

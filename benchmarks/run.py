@@ -1,0 +1,73 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig6/7   single-cluster serving (offline+online, 30B/70B)
+  fig8/9   distributed-cluster serving
+  fig9e    42-node high-heterogeneity
+  fig10    placement deep dive (helix/petals/swarm placements)
+  fig11    scheduling deep dive (helix/swarm/random scheduling)
+  fig12a+tab4  cluster-pruning ablation
+  fig12b   warm-start ablation
+  fault_*  beyond-paper fault tolerance (failover, straggler)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {}
+
+
+def _register():
+    from .ablation_tables import bench_ablation_pruning, bench_ablation_warmstart
+    from .fault_tables import bench_failover, bench_straggler
+    from .placement_tables import bench_placement_deepdive
+    from .scheduling_tables import bench_scheduling_deepdive
+    from .serving_tables import (bench_distributed_cluster,
+                                 bench_high_heterogeneity,
+                                 bench_single_cluster)
+    BENCHES.update({
+        "fig6_single_cluster": bench_single_cluster,
+        "fig8_distributed": bench_distributed_cluster,
+        "fig9e_heterogeneity": bench_high_heterogeneity,
+        "fig10_placement": bench_placement_deepdive,
+        "fig11_scheduling": bench_scheduling_deepdive,
+        "fig12a_pruning": bench_ablation_pruning,
+        "fig12b_warmstart": bench_ablation_warmstart,
+        "fault_failover": bench_failover,
+        "fault_straggler": bench_straggler,
+    })
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="smaller traces / budgets")
+    p.add_argument("--only", default="",
+                   help="comma-separated bench keys (default: all)")
+    args = p.parse_args()
+    _register()
+    keys = [k for k in args.only.split(",") if k] or list(BENCHES)
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    for key in keys:
+        t0 = time.time()
+        try:
+            BENCHES[key](quick=args.quick)
+            print(f"{key}__total,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+            print(f"{key}__total,{(time.time() - t0) * 1e6:.0f},FAILED:{e}",
+                  flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 11: request scheduling deep dive.
+
+Isolates scheduling from placement: Helix's placement everywhere; compare
+Helix IWRR vs Swarm (throughput-proportional) vs random scheduling,
+LLaMA-70B offline, single and distributed clusters.  Also reports per-link
+queueing (the §5.7 congestion case study).
+"""
+from __future__ import annotations
+
+from repro.core import (LLAMA_70B, make_distributed_cluster,
+                        make_single_cluster)
+
+from .common import emit, make_placement, run_serving
+
+
+def bench_scheduling_deepdive(quick: bool = False):
+    out = {}
+    n_req = 150 if quick else 300
+    for cname, cluster in [("single", make_single_cluster()),
+                           ("dist", make_distributed_cluster())]:
+        placement = make_placement("helix", cluster, LLAMA_70B)
+        rows = {}
+        for sm in ("helix", "swarm", "random"):
+            r = run_serving(cluster, LLAMA_70B, "helix", sm, offline=True,
+                            num_requests=n_req, placement=placement)
+            rows[sm] = r
+            emit(f"fig11_{cname}_{sm}_decode_tps", r.wall_s,
+                 f"{r.decode_throughput:.1f}")
+        for other in ("swarm", "random"):
+            gain = rows["helix"].decode_throughput / max(
+                rows[other].decode_throughput, 1e-9)
+            emit(f"fig11_{cname}_helix_vs_{other}_gain", 0.0, f"{gain:.3f}")
+        out[cname] = rows
+    return out

@@ -1,0 +1,87 @@
+"""Paper Figs. 6-9: end-to-end serving comparisons (simulator).
+
+fig6/7  single cluster  (24 nodes: 4xA100 + 8xL4 + 12xT4), LLaMA 30B/70B
+fig8/9  distributed     (3 regions, 100 Mb/s + 50 ms WAN)
+fig9e   high-heterogeneity (42 nodes, 7 device types), LLaMA 70B offline
+"""
+from __future__ import annotations
+
+from repro.core import (LLAMA_30B, LLAMA_70B, make_distributed_cluster,
+                        make_high_heterogeneity_cluster, make_single_cluster)
+
+from .common import emit, make_placement, run_serving
+
+
+def _compare(name, cluster, model, methods, *, offline, num_requests=None,
+             quick=False):
+    if num_requests is None:
+        # offline runs need enough concurrency to pressure KV capacity
+        # (that's where §4.2 estimation pays off)
+        num_requests = 700 if offline else 300
+    if quick:
+        num_requests = min(num_requests, 150)
+    rows = {}
+    for pm, sm in methods:
+        r = run_serving(cluster, model, pm, sm, offline=offline,
+                        num_requests=num_requests)
+        rows[r.method] = r
+        mode = "offline" if offline else "online"
+        emit(f"{name}_{mode}_{pm}-{sm}_decode_tps", r.wall_s,
+             f"{r.decode_throughput:.1f}")
+        if not offline:
+            emit(f"{name}_{mode}_{pm}-{sm}_prompt_lat_s", r.wall_s,
+                 f"{r.prompt_latency['mean']:.3f}")
+            emit(f"{name}_{mode}_{pm}-{sm}_decode_lat_s", r.wall_s,
+                 f"{r.decode_latency['mean']:.3f}")
+    return rows
+
+
+METHODS = [("helix", "helix"), ("swarm", "swarm"), ("sp", "helix")]
+
+
+def bench_single_cluster(quick: bool = False):
+    """Fig. 6 + Fig. 7 (single cluster, offline + online)."""
+    cluster = make_single_cluster()
+    out = {}
+    for model in (LLAMA_30B, LLAMA_70B):
+        for offline in (True, False):
+            rows = _compare(f"fig6_single_{model.name}", cluster, model,
+                            METHODS, offline=offline, quick=quick)
+            out[(model.name, offline)] = rows
+    # paper claim: helix >= ~1.9x swarm decode throughput on 70B offline
+    rows = out[("llama-70b", True)]
+    ratio = rows["helix/helix"].decode_throughput / max(
+        rows["swarm/swarm"].decode_throughput, 1e-9)
+    emit("fig6_70b_offline_helix_vs_swarm_ratio", 0.0, f"{ratio:.2f}")
+    return out
+
+
+def bench_distributed_cluster(quick: bool = False):
+    """Fig. 8 + Fig. 9a-d (distributed clusters)."""
+    cluster = make_distributed_cluster()
+    out = {}
+    for model in (LLAMA_30B, LLAMA_70B):
+        for offline in (True, False):
+            rows = _compare(f"fig8_dist_{model.name}", cluster, model,
+                            METHODS, offline=offline, quick=quick)
+            out[(model.name, offline)] = rows
+    rows = out[("llama-70b", True)]
+    ratio = rows["helix/helix"].decode_throughput / max(
+        rows["swarm/swarm"].decode_throughput, 1e-9)
+    emit("fig8_70b_offline_helix_vs_swarm_ratio", 0.0, f"{ratio:.2f}")
+    return out
+
+
+def bench_high_heterogeneity(quick: bool = False):
+    """Fig. 9e (42 nodes, 7 types, LLaMA-70B offline)."""
+    cluster = make_high_heterogeneity_cluster()
+    methods = [("helix", "helix"), ("swarm", "swarm"), ("sp", "helix"),
+               ("sp+", "helix")]
+    rows = _compare("fig9e_42node_llama-70b", cluster, LLAMA_70B, methods,
+                    offline=True, quick=quick)
+    helix = rows["helix/helix"].decode_throughput
+    for key, label in [("swarm/swarm", "swarm"), ("sp/helix", "sp"),
+                       ("sp+/helix", "sp_plus")]:
+        ratio = helix / max(rows[key].decode_throughput, 1e-9)
+        emit(f"fig9e_helix_vs_{label}_ratio", 0.0, f"{ratio:.2f}")
+    return rows

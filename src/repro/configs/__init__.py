@@ -1,0 +1,43 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config``.
+
+One module per assigned architecture; each exports ``CONFIG`` (the exact
+assigned full config) and ``SMOKE`` (a reduced same-family config for CPU
+smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import BlockSpec, ModelConfig
+
+ARCH_IDS = [
+    "jamba_1_5_large_398b",
+    "gemma3_12b",
+    "starcoder2_7b",
+    "smollm_360m",
+    "olmo_1b",
+    "whisper_tiny",
+    "chameleon_34b",
+    "deepseek_v2_236b",
+    "mixtral_8x22b",
+    "xlstm_350m",
+]
+
+# accept dash aliases like "jamba-1.5-large-398b"
+def _canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_canon(arch)}", package=__name__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_canon(arch)}", package=__name__)
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,60 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536 [arXiv:2403.19887; hf]
+Super-block: 7 mamba + 1 attention (1:7 ratio); MoE every OTHER layer
+(Jamba applies MoE at 1:2 frequency — 36 MoE layers; all-MoE would be ~724B,
+the alternating layout lands at the assigned ~398B).
+"""
+from .base import BlockSpec, ModelConfig
+
+_PATTERN = (
+    BlockSpec(kind="mamba", moe=True),
+    BlockSpec(kind="mamba", moe=False),
+    BlockSpec(kind="mamba", moe=True),
+    BlockSpec(kind="mamba", moe=False),
+    BlockSpec(kind="mamba", moe=True),
+    BlockSpec(kind="mamba", moe=False),
+    BlockSpec(kind="mamba", moe=True),
+    BlockSpec(kind="attn", moe=False),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    pattern=_PATTERN,
+    repeats=9,                       # 9 x 8 = 72 layers
+    moe_num_experts=16,
+    moe_top_k=2,
+    moe_d_ff=24576,
+    ssm_state_dim=16,
+    ssm_conv_width=4,
+    ssm_expand=2,
+    norm="rmsnorm",
+    notes="Mamba+attn 1:7 interleave; MoE every block (16e top-2).",
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    pattern=tuple([BlockSpec(kind="mamba", moe=True)] * 3
+                  + [BlockSpec(kind="attn", moe=True)]),
+    repeats=2,                       # 8 layers
+    moe_num_experts=4,
+    moe_top_k=2,
+    moe_capacity_factor=4.0,
+    moe_d_ff=128,
+    ssm_state_dim=8,
+    ssm_conv_width=4,
+    ssm_expand=2,
+    norm="rmsnorm",
+)

@@ -1,0 +1,44 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub).
+
+4L d_model=384 6H (GQA kv=6) d_ff=1536 vocab=51865 [arXiv:2212.04356;
+unverified].  The conv/mel frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings for the encoder.
+"""
+from .base import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    pattern=(BlockSpec(kind="attn", attn="full"),),
+    repeats=4,                        # 4 decoder layers
+    encoder_layers=4,                 # 4 encoder layers
+    max_source_positions=1500,
+    mlp_kind="plain",
+    norm="layernorm",
+    rope_theta=0.0,                   # whisper uses learned abs positions
+    max_position=4096,
+    notes="Encoder-decoder backbone; conv frontend stubbed to frame embeds.",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    pattern=(BlockSpec(kind="attn", attn="full"),),
+    repeats=2,
+    encoder_layers=2,
+    max_source_positions=64,
+    mlp_kind="plain",
+    norm="layernorm",
+    rope_theta=0.0,
+    max_position=256,
+)

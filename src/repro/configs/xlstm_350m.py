@@ -1,0 +1,41 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks.
+
+24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304 [arXiv:2405.04517;
+unverified].  d_ff=0: xLSTM blocks carry their own up/down projections, no
+separate FFN.  Pattern: 5 mLSTM : 1 sLSTM (xLSTM[7:1]-style interleave,
+rounded to the 24-layer budget).
+"""
+from .base import BlockSpec, ModelConfig
+
+_PATTERN = tuple([BlockSpec(kind="mlstm")] * 5 + [BlockSpec(kind="slstm")])
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=_PATTERN,
+    repeats=4,                       # 4 x 6 = 24 layers
+    xlstm_heads=4,
+    norm="rmsnorm",
+    tie_embeddings=True,
+    notes="Recurrent: constant-size per-request state instead of KV cache.",
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke",
+    family="ssm",
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=0,
+    vocab_size=512,
+    pattern=tuple([BlockSpec(kind="mlstm")] * 2 + [BlockSpec(kind="slstm")]),
+    repeats=2,
+    xlstm_heads=2,
+    norm="rmsnorm",
+    tie_embeddings=True,
+)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for serving hot spots (validated via interpret=True).
+
+flash_attention — prefill causal/windowed GQA attention
+paged_attention — decode over paged KV pool (TPU-native vLLM PagedAttention)
+"""

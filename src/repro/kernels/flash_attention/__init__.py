@@ -1,0 +1,3 @@
+from .kernel import flash_attention
+from .ops import flash_attention_bshd, flash_attention_ref_bshd
+from .ref import flash_attention_ref

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (prefill, causal/windowed, GQA).
+
+Grid: (batch, q_head, num_q_blocks, num_kv_blocks); the kv axis is the
+innermost (sequential on TPU), so the online-softmax accumulators live in
+VMEM scratch and persist across kv steps.  BlockSpecs tile
+  q: (1, 1, block_q, D)      k/v: (1, 1, block_kv, D)
+with the kv-head index derived from the q-head index (GQA: h -> h // G).
+The MXU sees (block_q x D) @ (D x block_kv) matmuls — block sizes default to
+multiples of 128 to keep lanes full.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_kv: int, causal: bool,
+            window: int, num_kv_blocks: int, seq_q: int, seq_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bkv, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+    kpos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 1)
+    mask = (qpos < seq_q) & (kpos < seq_kv)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    # zero the kv padding: OOB block reads are undefined (NaN in interpret
+    # mode) and 0 * NaN would poison the accumulator
+    kv_valid = (ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_kv, 1), 0)) < seq_kv
+    v = jnp.where(kv_valid, v, 0.0)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,Sq,D); k/v: (B,KH,Sk,D) -> (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_kv)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        causal=causal, window=window, num_kv_blocks=nk, seq_q=Sq, seq_kv=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max
+            pltpu.VMEM((block_q,), jnp.float32),       # running denom
+            pltpu.VMEM((block_q, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the flash attention kernel, model-layout friendly."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """Model layout (B,S,H,D)/(B,S,KH,D) -> (B,S,H,D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv,
+                          interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_attention_ref_bshd(q, k, v, *, causal=True, window=0):
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    return jnp.swapaxes(
+        flash_attention_ref(qt, kt, vt, causal=causal, window=window), 1, 2)

@@ -1,0 +1,3 @@
+from .kernel import paged_attention
+from .ops import dense_to_pages, paged_attention_op
+from .ref import paged_attention_ref

@@ -1,0 +1,31 @@
+"""Jit'd wrapper + page-pool utilities for paged attention decode."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention
+from .ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+                       interpret: bool = False):
+    return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                           interpret=interpret)
+
+
+def dense_to_pages(k: jax.Array, v: jax.Array, lengths, page: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack dense (B,S,KH,D) caches into a page pool + block tables
+    (testing/migration helper; a real server allocates pages on demand)."""
+    B, S, KH, D = k.shape
+    assert S % page == 0
+    npages = S // page
+    k_pages = k.reshape(B * npages, page, KH, D)
+    v_pages = v.reshape(B * npages, page, KH, D)
+    block_tables = jnp.arange(B * npages, dtype=jnp.int32).reshape(B, npages)
+    return k_pages, v_pages, block_tables

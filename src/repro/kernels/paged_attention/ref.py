@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for paged attention decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    """Decode attention over a paged KV pool.
+
+    q:            (B, H, D)        one query token per sequence
+    k/v_pages:    (P, page, KH, D) global page pool
+    block_tables: (B, NP) int32    page ids per sequence (sequential fill)
+    lengths:      (B,) int32       tokens in each sequence's KV
+    returns:      (B, H, D)
+    """
+    B, H, D = q.shape
+    P, page, KH, _ = k_pages.shape
+    NP = block_tables.shape[1]
+    G = H // KH
+
+    k = k_pages[block_tables]            # (B, NP, page, KH, D)
+    v = v_pages[block_tables]
+    k = k.reshape(B, NP * page, KH, D)
+    v = v.reshape(B, NP * page, KH, D)
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    pos = jnp.arange(NP * page)[None, :]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production meshes, dry-run, train/serve drivers."""
+from .mesh import make_production_mesh, make_test_mesh

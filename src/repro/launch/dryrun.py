@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first backend init).  512 placeholder host devices back the
+(16,16) single-pod and (2,16,16) multi-pod meshes.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun
+  python -m repro.launch.dryrun --arch smollm_360m --shape train_4k --mesh single
+
+Per cell this writes JSON with:
+  flops / bytes (compiled.cost_analysis, per-device local),
+  collective op bytes by kind (parsed from compiled.as_text()),
+  memory_analysis (if the backend provides it),
+  per-device bytes of params / caches / optimizer state (from shardings).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import SHAPES, Cell, build_cell, cell_applicable
+from repro.roofline.analysis import FlopsOptions, roofline_terms
+from repro.roofline.hlo import collective_totals
+
+
+def shard_bytes(tree, shardings, num_devices: int) -> float:
+    """Per-device bytes of a sharded pytree."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        frac = 1.0
+        if isinstance(sh, jax.sharding.NamedSharding):
+            spec = sh.spec
+            for i, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = (entry,) if isinstance(entry, str) else entry
+                for a in axes:
+                    frac /= sh.mesh.shape[a]
+        total += n * leaf.dtype.itemsize * frac
+    return total
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir=None,
+             extra=None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "mesh_shape": dict(zip(mesh.axis_names,
+                                     [int(mesh.shape[a]) for a in mesh.axis_names])),
+              "tag": tag, "status": "ok"}
+    try:
+        from repro.launch.steps import tuned_config
+        cfg = tuned_config(get_config(arch), extra or {})
+        ok, reason = cell_applicable(cfg, shape)
+        if not ok:
+            record["status"] = "skipped"
+            record["reason"] = reason
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                suffix = f"__{tag}" if tag else ""
+                with open(os.path.join(
+                        out_dir, f"{arch}__{shape}__{mesh_kind}{suffix}.json"),
+                        "w") as f:
+                    json.dump(record, f, indent=1, default=str)
+            return record
+        cell = build_cell(arch, shape, mesh, extra=extra)
+        record["description"] = cell.description
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        try:
+            mem = compiled.memory_analysis()
+            record["memory_analysis"] = {
+                k: int(getattr(mem, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # backend may not support it
+            record["memory_analysis"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            record["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+        except Exception as e:
+            record["cost_analysis"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll_bytes, coll_count, _mults = collective_totals(hlo)
+        record["collective_bytes"] = coll_bytes       # per-device, trip-adjusted
+        record["collective_count"] = coll_count
+        record["hlo_size_chars"] = len(hlo)
+
+        num_devices = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        record["num_devices"] = num_devices
+        info = SHAPES[shape]
+        opts = FlopsOptions(
+            skip_masked_chunks=bool((extra or {}).get("skip_masked_chunks")),
+            moe_capacity_factor=getattr(cfg, "moe_capacity_factor", 1.25))
+        record["roofline"] = roofline_terms(
+            cfg, info["kind"], info["batch"], info["seq"], num_devices,
+            collective_local_bytes=float(sum(coll_bytes.values())),
+            opts=opts)
+        record["params_bytes_per_device"] = shard_bytes(
+            cell.args[0], cell.in_shardings[0], num_devices)
+        if shape in ("decode_32k", "long_500k"):
+            record["cache_bytes_per_device"] = shard_bytes(
+                cell.args[2], cell.in_shardings[2], num_devices)
+        if shape == "train_4k":
+            record["opt_bytes_per_device"] = shard_bytes(
+                cell.args[1], cell.in_shardings[1], num_devices)
+        record["model_params"] = int(cfg.param_count())
+        record["model_active_params"] = int(cfg.active_param_count())
+        record["lower_s"] = round(t_lower - t0, 2)
+        record["compile_s"] = round(t_compile - t_lower, 2)
+    except Exception as e:
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        record["total_s"] = round(time.time() - t0, 2)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(out_dir,
+                            f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                      "both"])
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, out_dir=args.out,
+                               tag=args.tag)
+                flops = rec.get("cost_analysis", {}).get("flops", 0)
+                print(f"{arch:24s} {shape:12s} {mesh_kind:6s} "
+                      f"{rec['status']:8s} "
+                      f"compile={rec.get('compile_s', '-'):>7}s "
+                      f"flops/dev={flops:.3e} "
+                      f"coll={sum(rec.get('collective_bytes', {}).values())/1e6:10.1f}MB"
+                      if rec["status"] == "ok" else
+                      f"{arch:24s} {shape:12s} {mesh_kind:6s} "
+                      f"{rec['status']:8s} {rec.get('reason', rec.get('error', ''))[:90]}",
+                      flush=True)
+                if rec["status"] == "failed":
+                    failures += 1
+    print(f"\ndone; failures={failures}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""Step builders + input specs for every (architecture x shape) cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins (no
+allocation); ``build_cell(arch, shape, mesh)`` returns the jitted-but-
+unlowered step function plus in/out shardings and abstract args, ready for
+``.lower(...).compile()`` in dryrun.py.
+
+Shape semantics (assignment):
+  train_4k     -> train_step   (tokens+labels, global_batch x seq)
+  prefill_32k  -> prefill      (prompt processing, returns decode caches)
+  decode_32k   -> serve_step   (one new token, KV cache of seq_len)
+  long_500k    -> serve_step   (batch=1, 512k KV; sequence-parallel rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.base import ModelConfig
+from ..dist.sharding import (LONG_CONTEXT_RULES, SERVE_RULES, TRAIN_RULES,
+                             ShardingRules, moe_variant, sharding_for)
+from ..models import model as M
+from ..models.common import abstract_shapes, logical_axes
+from ..training.optimizer import OptimizerConfig, opt_init
+from ..training.train_step import TrainConfig, make_train_step
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1,
+                  "rules": "long"},
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if shape == "long_500k":
+        if cfg.pure_full_attention:
+            return False, ("pure full-attention arch: 512k decode KV is "
+                           "quadratic-prefill territory; skipped per "
+                           "assignment (see DESIGN.md)")
+        if cfg.is_encoder_decoder:
+            return False, "encoder-decoder: decoder positions << 512k"
+    return True, ""
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
+    """Adafactor >=30B (Adam state would not fit 16GB/chip), AdamW below."""
+    if cfg.param_count() >= 30e9:
+        return OptimizerConfig(name="adafactor", lr=1e-4)
+    return OptimizerConfig(name="adamw", lr=3e-4)
+
+
+def rules_for(shape: str, kind: str,
+              cfg: Optional[ModelConfig] = None) -> ShardingRules:
+    if SHAPES[shape].get("rules") == "long":
+        base = LONG_CONTEXT_RULES
+    else:
+        base = TRAIN_RULES if kind == "train" else SERVE_RULES
+    if cfg is not None and cfg.moe_num_experts and kind != "train":
+        return moe_variant(base)
+    return base
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    specs = M.param_specs(cfg)
+    return abstract_shapes(specs, cfg.param_dtype), logical_axes(specs)
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    i32 = jnp.int32
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.is_encoder_decoder:
+            out["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.max_source_positions, cfg.d_model), jnp.bfloat16)
+    elif kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.is_encoder_decoder:
+            out["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.max_source_positions, cfg.d_model), jnp.bfloat16)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+        out["cache_pos"] = jax.ShapeDtypeStruct((B,), i32)
+    return out
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    shapes = jax.eval_shape(
+        lambda: M.init_caches(cfg, batch, max_len,
+                              src_len=cfg.max_source_positions
+                              if cfg.is_encoder_decoder else None))
+    axes = M.cache_axes(cfg)
+    return shapes, axes
+
+
+def _tree_shardings(shapes, axes, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, ax: sharding_for(tuple(s.shape), tuple(ax), rules, mesh),
+        shapes, axes,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def opt_state_shardings(opt_cfg: OptimizerConfig, params_abs, params_axes,
+                        params_sh, rules: ShardingRules, mesh: Mesh):
+    """Optimizer-state shardings derived from param logical axes.
+
+    AdamW m/v mirror the params; Adafactor's factored second moments drop
+    the last (vr) / second-to-last (vc) dims and inherit the remaining axes.
+    """
+    from ..training.optimizer import _factored
+    rep = NamedSharding(mesh, P())
+    if opt_cfg.name == "adamw":
+        return {"m": params_sh, "v": params_sh, "step": rep}
+    flat_p = jax.tree.leaves(params_abs)
+    flat_ax = jax.tree.structure(params_abs).flatten_up_to(params_axes)
+    v = []
+    for p, ax in zip(flat_p, flat_ax):
+        ax = tuple(ax)
+        if _factored(p.shape, opt_cfg.min_dim_factored):
+            v.append({
+                "vr": sharding_for(p.shape[:-1], ax[:-1], rules, mesh),
+                "vc": sharding_for(p.shape[:-2] + p.shape[-1:],
+                                   ax[:-2] + ax[-1:], rules, mesh),
+            })
+        else:
+            v.append({"v": sharding_for(p.shape, ax, rules, mesh)})
+    return {"v": v, "step": rep}
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable                     # to be jitted
+    args: Tuple                      # abstract args (ShapeDtypeStruct trees)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    description: str
+
+
+def tuned_config(cfg: ModelConfig, extra: Dict[str, Any]) -> ModelConfig:
+    """Hillclimb knobs that alter the model structure.
+
+    pad_q_heads: pad query heads (zero-padded W_q/W_o rows — exact math for
+    interleave-padded checkpoints) so head count divides the TP axis.
+    """
+    pad = extra.get("pad_q_heads")
+    if pad:
+        cfg = dataclasses.replace(cfg, num_heads=int(pad),
+                                  head_dim=cfg.resolved_head_dim)
+    groups = extra.get("moe_groups")
+    if groups:
+        cfg = dataclasses.replace(cfg, moe_groups=int(groups))
+    dcf = extra.get("decode_capacity_factor")
+    if dcf:
+        cfg = dataclasses.replace(cfg, moe_decode_drop_free=False,
+                                  moe_capacity_factor=float(dcf))
+    return cfg
+
+
+def tuned_rules(rules: ShardingRules, extra: Dict[str, Any]) -> ShardingRules:
+    """Hillclimb knobs on the sharding rules.
+
+    no_head_dim_shard: drop head_dim->model (use when q-heads shard instead;
+    head_dim sharding forces a scores-psum per attention chunk).
+    """
+    out = []
+    for name, ax in rules.rules:
+        if name == "head_dim" and extra.get("no_head_dim_shard"):
+            out.append((name, None))
+        elif name == "embed" and extra.get("embed_shard"):
+            out.append((name, extra["embed_shard"]))
+        elif name == "seq" and extra.get("cache_seq_shard"):
+            # decode: shard KV/MLA caches along sequence over the model axis
+            # (distributed softmax-combine is KB-sized; rank/head sharding
+            # psums scores-sized partials instead)
+            out.append((name, "model"))
+        elif name == "lora" and extra.get("cache_seq_shard"):
+            out.append((name, None))
+        else:
+            out.append((name, ax))
+    return ShardingRules(rules=tuple(out))
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               extra: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    kind = info["kind"]
+    B, S = info["batch"], info["seq"]
+    extra = extra or {}
+    cfg = tuned_config(cfg, extra)
+    rules = tuned_rules(rules_for(shape, kind, cfg), extra)
+    # install activation-sharding hints for model-side constraints
+    from ..models import partition
+    partition.set_mesh_rules(mesh, rules)
+
+    params_abs, params_axes = abstract_params(cfg)
+    params_sh = _tree_shardings(params_abs, params_axes, rules, mesh)
+    inputs = input_specs(arch, shape)
+
+    if kind == "train":
+        opt_cfg = extra.get("optimizer") or optimizer_for(cfg)
+        tc = TrainConfig(optimizer=opt_cfg,
+                         remat=extra.get("remat", "full"),
+                         microbatches=extra.get("microbatches", 1),
+                         skip_masked_chunks=bool(
+                             extra.get("skip_masked_chunks")))
+        step = make_train_step(cfg, tc)
+        opt_abs = jax.eval_shape(functools.partial(opt_init, tc.optimizer),
+                                 params_abs)
+        opt_sh = opt_state_shardings(tc.optimizer, params_abs, params_axes,
+                                     params_sh, rules, mesh)
+        batch_sh = {
+            k: NamedSharding(mesh, rules.spec(
+                ("batch", "seq", "embed")[:v.ndim], mesh, v.shape))
+            for k, v in inputs.items()}
+        return Cell(
+            arch=arch, shape=shape, fn=step,
+            args=(params_abs, opt_abs, inputs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            description=f"train_step {arch} {B}x{S} opt={tc.optimizer.name}")
+
+    if kind == "prefill":
+        skip = bool(extra.get("skip_masked_chunks"))
+
+        def prefill_fn(params, batch):
+            return M.prefill(cfg, params, batch["tokens"], max_len=S,
+                             encoder_frames=batch.get("encoder_frames"),
+                             skip_masked_chunks=skip)
+        batch_sh = {
+            k: NamedSharding(mesh, rules.spec(
+                ("batch", "seq", "embed")[:v.ndim], mesh, v.shape))
+            for k, v in inputs.items()}
+        return Cell(
+            arch=arch, shape=shape, fn=prefill_fn,
+            args=(params_abs, inputs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None,
+            donate_argnums=(),
+            description=f"prefill {arch} {B}x{S}")
+
+    # decode
+    caches_abs, caches_axes = abstract_caches(cfg, B, S)
+    caches_sh = _tree_shardings(caches_abs, caches_axes, rules, mesh)
+    tok_sh = NamedSharding(mesh, rules.spec(("batch",), mesh, (B,)))
+
+    def decode_fn(params, tokens, caches, cache_pos):
+        return M.decode_step(cfg, params, tokens, caches, cache_pos)
+
+    return Cell(
+        arch=arch, shape=shape, fn=decode_fn,
+        args=(params_abs, inputs["tokens"], caches_abs, inputs["cache_pos"]),
+        in_shardings=(params_sh, tok_sh, caches_sh, tok_sh),
+        out_shardings=(None, caches_sh),
+        donate_argnums=(2,),
+        description=f"serve_step {arch} batch={B} kv={S}")

@@ -1,0 +1,4 @@
+"""Pure-JAX model zoo covering the 10 assigned architectures."""
+from .model import (decode_step, encode, forward, init, init_caches, loss_fn,
+                    param_specs, prefill)
+from .common import abstract_shapes, init_params, logical_axes, ParamSpec

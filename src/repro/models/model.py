@@ -1,0 +1,458 @@
+"""Model assembly: config -> param specs, train forward, prefill, decode.
+
+The layer stack is ``prologue + pattern * repeats``; the repeated part runs
+under ``lax.scan`` with params stacked on a leading "layers" axis, keeping
+compiled HLO size independent of depth.  Encoder-decoder (whisper) adds an
+encoder stack and per-decoder-block cross-attention.
+
+API:
+  param_specs(cfg)                        ParamSpec tree
+  init(cfg, key)                          materialized params
+  forward(cfg, params, tokens, ...)       logits (+ aux) — training/scoring
+  prefill(cfg, params, tokens, ...)       logits, caches
+  decode_step(cfg, params, token, caches, pos)  logits, new caches
+  init_caches(cfg, batch, max_len)        cache pytree for decode
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import BlockSpec, ModelConfig
+from .attention import (attn_spec, cross_attn_spec, gqa_cache_init, gqa_decode,
+                        gqa_prefill, mla_cache_init, mla_decode, mla_prefill)
+from .common import (ParamSpec, apply_norm, init_params, norm_spec)
+from .moe import ffn_apply, ffn_spec, moe_apply, moe_spec
+from .ssm import (mamba_decode, mamba_prefill, mamba_spec, mamba_state_init,
+                  mlstm_decode, mlstm_prefill, mlstm_spec, mlstm_state_init,
+                  slstm_decode, slstm_prefill, slstm_spec, slstm_state_init)
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _block_spec(cfg: ModelConfig, b: BlockSpec, decoder: bool) -> Dict:
+    spec: Dict[str, Any] = {"norm1": norm_spec(cfg)}
+    if b.kind == "attn":
+        spec["mix"] = attn_spec(cfg)
+    elif b.kind == "mamba":
+        spec["mix"] = mamba_spec(cfg)
+    elif b.kind == "mlstm":
+        spec["mix"] = mlstm_spec(cfg)
+    elif b.kind == "slstm":
+        spec["mix"] = slstm_spec(cfg)
+    else:
+        raise ValueError(b.kind)
+    if decoder and cfg.is_encoder_decoder:
+        spec["cross_norm"] = norm_spec(cfg)
+        spec["cross"] = cross_attn_spec(cfg)
+    if b.moe:
+        spec["norm2"] = norm_spec(cfg)
+        spec["moe"] = moe_spec(cfg)
+    elif cfg.d_ff > 0:
+        spec["norm2"] = norm_spec(cfg)
+        spec["ffn"] = ffn_spec(cfg)
+    return spec
+
+
+def _stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"),
+                                     scale=0.02)
+    if cfg.prologue:
+        specs["prologue"] = [
+            _block_spec(cfg, b, decoder=True) for b in cfg.prologue]
+    specs["super"] = _stack_specs(
+        {f"pos{i}": _block_spec(cfg, b, decoder=True)
+         for i, b in enumerate(cfg.pattern)}, cfg.repeats)
+    if cfg.is_encoder_decoder:
+        enc_block = _block_spec(
+            cfg, BlockSpec(kind="attn", attn="full"), decoder=False)
+        specs["encoder"] = {
+            "pos_embed": ParamSpec((cfg.max_source_positions, d),
+                                   (None, "embed"), scale=0.02),
+            "blocks": _stack_specs(enc_block, cfg.encoder_layers),
+            "final_norm": norm_spec(cfg),
+        }
+        specs["dec_pos_embed"] = ParamSpec((cfg.max_position, d),
+                                           (None, "embed"), scale=0.02)
+    return specs
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(param_specs(cfg), key, cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block application (prefill / train path)
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg, b: BlockSpec, p, h, positions, enc_out,
+                 skip_masked_chunks=False, collect_cache=False):
+    aux = jnp.zeros((), jnp.float32)
+    hn = apply_norm(cfg, p["norm1"], h)
+    window = b.window if b.attn in ("swa", "local") else 0
+    cache = None
+    if b.kind == "attn":
+        if cfg.mla_kv_lora_rank:
+            out, cache = mla_prefill(cfg, p["mix"], hn, positions,
+                                     skip_masked_chunks=skip_masked_chunks)
+        else:
+            out, cache = gqa_prefill(cfg, p["mix"], hn, positions,
+                                     causal=True, window=window,
+                                     skip_masked_chunks=skip_masked_chunks)
+    elif b.kind == "mamba":
+        out, cache = mamba_prefill(cfg, p["mix"], hn)
+    elif b.kind == "mlstm":
+        out, cache = mlstm_prefill(cfg, p["mix"], hn)
+    elif b.kind == "slstm":
+        out, cache = slstm_prefill(cfg, p["mix"], hn)
+    h = h + out
+    if "cross" in p and enc_out is not None:
+        hn = apply_norm(cfg, p["cross_norm"], h)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["k"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["v"])
+        out, _ = gqa_prefill(cfg, p["cross"], hn, positions,
+                             cross_kv=(ck, cv))
+        h = h + out
+        if collect_cache:
+            cache = {"self": cache, "cross": (ck, cv)}
+    if "moe" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        out, moe_aux = moe_apply(cfg, p["moe"], hn)
+        aux = aux + moe_aux["aux_loss"]
+        h = h + out
+    elif "ffn" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + ffn_apply(p["ffn"], hn)
+    return h, cache, aux
+
+
+def _embed(cfg, params, tokens, positions):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.is_encoder_decoder:
+        h = h + jnp.take(params["dec_pos_embed"],
+                         jnp.minimum(positions, cfg.max_position - 1), axis=0)
+    return h
+
+
+def _logits(cfg, params, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+
+def encode(cfg, params, frames):
+    """Whisper encoder over stubbed frame embeddings (B, T_src, d)."""
+    enc = params["encoder"]
+    T = frames.shape[1]
+    h = frames + enc["pos_embed"][:T][None]
+    positions = jnp.broadcast_to(jnp.arange(T), frames.shape[:2])
+
+    def step(h, p):
+        hn = apply_norm(cfg, p["norm1"], h)
+        out, _ = gqa_prefill(cfg, p["mix"], hn, positions, causal=False)
+        h = h + out
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + ffn_apply(p["ffn"], hn)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h, enc["blocks"])
+    return apply_norm(cfg, enc["final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# Train / scoring forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, *, encoder_frames=None,
+            skip_masked_chunks=False) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B,S) int32 -> (logits (B,S,V), aux_loss scalar)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = encode(cfg, params, encoder_frames) \
+        if cfg.is_encoder_decoder else None
+    h = _embed(cfg, params, tokens, positions)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, b in enumerate(cfg.prologue):
+        h, _, aux = _apply_block(cfg, b, params["prologue"][i], h, positions,
+                                 enc_out, skip_masked_chunks)
+        aux_total += aux
+
+    def superblock(carry, layer_params):
+        h, aux_acc = carry
+        for i, b in enumerate(cfg.pattern):
+            h, _, aux = _apply_block(cfg, b, layer_params[f"pos{i}"], h,
+                                     positions, enc_out, skip_masked_chunks)
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), None
+
+    (h, aux_total), _ = jax.lax.scan(superblock, (h, aux_total),
+                                     params["super"])
+    h = apply_norm(cfg, params["final_norm"], h)
+    return _logits(cfg, params, h), aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            aux_weight: float = 0.01,
+            skip_masked_chunks: bool = False) -> Tuple[jax.Array, Dict]:
+    """batch: tokens (B,S), labels (B,S) with -100 = ignore,
+    optional encoder_frames."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          encoder_frames=batch.get("encoder_frames"),
+                          skip_masked_chunks=skip_masked_chunks)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "tokens": denom.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+def _cache_init_for_block(cfg, b: BlockSpec, batch, max_len, dtype,
+                          src_len: Optional[int] = None):
+    window = b.window if b.attn in ("swa", "local") else 0
+    if b.kind == "attn":
+        if cfg.mla_kv_lora_rank:
+            c = mla_cache_init(cfg, batch, max_len, dtype)
+        else:
+            c = gqa_cache_init(cfg, batch, max_len, window, dtype)
+        if cfg.is_encoder_decoder:
+            nh, hd = cfg.num_heads, cfg.resolved_head_dim
+            T = src_len or cfg.max_source_positions
+            c = {"self": c,
+                 "cross": (jnp.zeros((batch, T, nh, hd), dtype),
+                           jnp.zeros((batch, T, nh, hd), dtype))}
+        return c
+    if b.kind == "mamba":
+        return mamba_state_init(cfg, batch, dtype)
+    if b.kind == "mlstm":
+        return mlstm_state_init(cfg, batch, dtype)
+    if b.kind == "slstm":
+        return slstm_state_init(cfg, batch, dtype)
+    raise ValueError(b.kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                src_len: Optional[int] = None):
+    dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    caches: Dict[str, Any] = {}
+    if cfg.prologue:
+        caches["prologue"] = [
+            _cache_init_for_block(cfg, b, batch, max_len, dtype, src_len)
+            for b in cfg.prologue]
+    per_pos = {f"pos{i}": _cache_init_for_block(cfg, b, batch, max_len, dtype,
+                                                src_len)
+               for i, b in enumerate(cfg.pattern)}
+    caches["super"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), per_pos)
+    return caches
+
+
+def _cache_axes_for_block(cfg, b: BlockSpec):
+    """Logical-axes tree mirroring _cache_init_for_block (for sharding)."""
+    if b.kind == "attn":
+        if cfg.mla_kv_lora_rank:
+            c = {"c": ("batch", "seq", "lora"),
+                 "r": ("batch", "seq", None),
+                 "pos": ("batch", "seq")}
+        else:
+            c = {"k": ("batch", "seq", "kv_heads", "head_dim"),
+                 "v": ("batch", "seq", "kv_heads", "head_dim"),
+                 "pos": ("batch", "seq")}
+        if cfg.is_encoder_decoder:
+            cross = (("batch", None, "heads", "head_dim"),
+                     ("batch", None, "heads", "head_dim"))
+            c = {"self": c, "cross": cross}
+        return c
+    if b.kind == "mamba":
+        return {"h": ("batch", "ff", "state"),
+                "conv": ("batch", "conv", "ff")}
+    if b.kind == "mlstm":
+        return {"C": ("batch", "heads", "head_dim", None),
+                "n": ("batch", "heads", "head_dim"),
+                "m": ("batch", "heads")}
+    if b.kind == "slstm":
+        return {"c": ("batch", "embed"), "n": ("batch", "embed"),
+                "m": ("batch", "embed"), "h": ("batch", "embed")}
+    raise ValueError(b.kind)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes matching the init_caches structure (leading "layers"
+    axis on the stacked super-block caches)."""
+    out: Dict[str, Any] = {}
+    if cfg.prologue:
+        out["prologue"] = [
+            _cache_axes_for_block(cfg, b) for b in cfg.prologue]
+    per_pos = {f"pos{i}": _cache_axes_for_block(cfg, b)
+               for i, b in enumerate(cfg.pattern)}
+    out["super"] = jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax), per_pos,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return out
+
+
+def _apply_block_decode(cfg, b: BlockSpec, p, h, cache, cache_pos, enc_out):
+    hn = apply_norm(cfg, p["norm1"], h)
+    window = b.window if b.attn in ("swa", "local") else 0
+    self_cache = cache["self"] if (cfg.is_encoder_decoder
+                                   and b.kind == "attn") else cache
+    if b.kind == "attn":
+        if cfg.mla_kv_lora_rank:
+            out, new_cache = mla_decode(cfg, p["mix"], hn, self_cache, cache_pos)
+        else:
+            out, new_cache = gqa_decode(cfg, p["mix"], hn, self_cache,
+                                        cache_pos, window=window)
+    elif b.kind == "mamba":
+        out, new_cache = mamba_decode(cfg, p["mix"], hn, cache)
+    elif b.kind == "mlstm":
+        out, new_cache = mlstm_decode(cfg, p["mix"], hn, cache)
+    elif b.kind == "slstm":
+        out, new_cache = slstm_decode(cfg, p["mix"], hn, cache)
+    h = h + out
+    if "cross" in p and b.kind == "attn" and cfg.is_encoder_decoder:
+        hn = apply_norm(cfg, p["cross_norm"], h)
+        out, _ = gqa_decode(cfg, p["cross"], hn, None, cache_pos,
+                            cross_kv=cache["cross"])
+        h = h + out
+        new_cache = {"self": new_cache, "cross": cache["cross"]}
+    if "moe" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        out, _ = moe_apply(cfg, p["moe"], hn)
+        h = h + out
+    elif "ffn" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + ffn_apply(p["ffn"], hn)
+    return h, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, caches, cache_pos):
+    """One autoregressive step.  tokens: (B,) int32; cache_pos: (B,) int32
+    (absolute position of this token).  Returns (logits (B,V), new caches)."""
+    B = tokens.shape[0]
+    positions = cache_pos[:, None]
+    h = _embed(cfg, params, tokens[:, None], positions)
+
+    new_caches: Dict[str, Any] = {}
+    if cfg.prologue:
+        new_caches["prologue"] = []
+        for i, b in enumerate(cfg.prologue):
+            h, nc = _apply_block_decode(cfg, b, params["prologue"][i], h,
+                                        caches["prologue"][i], cache_pos, None)
+            new_caches["prologue"].append(nc)
+
+    def superblock(h, xs):
+        layer_params, layer_cache = xs
+        new_layer_cache = {}
+        for i, b in enumerate(cfg.pattern):
+            h, nc = _apply_block_decode(cfg, b, layer_params[f"pos{i}"], h,
+                                        layer_cache[f"pos{i}"], cache_pos,
+                                        None)
+            new_layer_cache[f"pos{i}"] = nc
+        return h, new_layer_cache
+
+    h, new_super = jax.lax.scan(superblock, h,
+                                (params["super"], caches["super"]))
+    new_caches["super"] = new_super
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h)[:, 0]
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, max_len: Optional[int] = None,
+            encoder_frames=None, skip_masked_chunks=False):
+    """Process the prompt, returning (last-token logits, caches) ready for
+    decode at position S.  tokens: (B,S)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = encode(cfg, params, encoder_frames) \
+        if cfg.is_encoder_decoder else None
+    h = _embed(cfg, params, tokens, positions)
+    dtype = h.dtype
+
+    def fill_cache(b: BlockSpec, raw_cache):
+        """Convert prefill outputs (full k/v or final state) into the decode
+        cache layout (ring/dense buffers sized max_len)."""
+        window = b.window if b.attn in ("swa", "local") else 0
+        if b.kind != "attn":
+            return raw_cache
+        if cfg.mla_kv_lora_rank:
+            c_kv, k_rope = raw_cache
+            tgt = mla_cache_init(cfg, B, max_len, dtype)
+            n = min(S, max_len)
+            tgt["c"] = tgt["c"].at[:, :n].set(c_kv[:, -n:])
+            tgt["r"] = tgt["r"].at[:, :n].set(k_rope[:, -n:])
+            pos_vals = jnp.broadcast_to(jnp.arange(S)[-n:], (B, n))
+            tgt["pos"] = tgt["pos"].at[:, :n].set(pos_vals)
+            return tgt
+        inner = raw_cache["self"] if isinstance(raw_cache, dict) and \
+            "self" in raw_cache else raw_cache
+        k, v = inner
+        tgt = gqa_cache_init(cfg, B, max_len, window, dtype)
+        W = tgt["k"].shape[1]
+        n = min(S, W)
+        # ring layout: token at absolute pos p sits at slot p % W
+        last_pos = jnp.arange(S - n, S)
+        slots = (last_pos % W) if window else last_pos
+        tgt["k"] = tgt["k"].at[:, slots].set(k[:, -n:])
+        tgt["v"] = tgt["v"].at[:, slots].set(v[:, -n:])
+        tgt["pos"] = tgt["pos"].at[:, slots].set(
+            jnp.broadcast_to(last_pos, (B, n)))
+        out = tgt
+        if isinstance(raw_cache, dict) and "cross" in raw_cache:
+            # keep the encoder length static/unpadded: zero-padded slots
+            # would receive softmax mass at decode time
+            out = {"self": tgt, "cross": raw_cache["cross"]}
+        return out
+
+    caches: Dict[str, Any] = {}
+    if cfg.prologue:
+        caches["prologue"] = []
+        for i, b in enumerate(cfg.prologue):
+            h, raw, _ = _apply_block(cfg, b, params["prologue"][i], h,
+                                     positions, enc_out, skip_masked_chunks,
+                                     collect_cache=True)
+            caches["prologue"].append(fill_cache(b, raw))
+
+    def superblock(h, layer_params):
+        raws = {}
+        for i, b in enumerate(cfg.pattern):
+            h, raw, _ = _apply_block(cfg, b, layer_params[f"pos{i}"], h,
+                                     positions, enc_out, skip_masked_chunks,
+                                     collect_cache=True)
+            raws[f"pos{i}"] = fill_cache(b, raw)
+        return h, raws
+
+    h, super_caches = jax.lax.scan(superblock, h, params["super"])
+    caches["super"] = super_caches
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h[:, -1:])[:, 0]
+    return logits, caches

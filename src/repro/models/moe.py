@@ -1,0 +1,217 @@
+"""Dense (SwiGLU) FFN and token-choice top-k MoE.
+
+MoE uses scatter-based dispatch into per-expert capacity buffers
+(E, C, d) so experts shard over the "model"/expert mesh axis (EP) and the
+expert matmuls stay dense einsums (MXU-friendly):
+
+  router -> top-k -> position-in-expert (cumsum over one-hot) ->
+  scatter tokens into (E, C, d) -> expert SwiGLU einsum -> gather back.
+
+Tokens past capacity C are dropped (standard GShard behaviour); capacity
+factor is configurable and counted in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, silu
+from .partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# Scatter-free routing primitive
+# ---------------------------------------------------------------------------
+# A batched gather whose transpose is expressed as ANOTHER gather (the caller
+# supplies the inverse mapping).  jax's take_along_axis VJP is a scatter-add;
+# GSPMD replicates scatter operands, which at 398B scale turns MoE dispatch
+# gradients into full-residual-stream all-reduces (EXPERIMENTS §Perf cell A).
+# Dispatch (tokens->capacity slots) and combine (slots->tokens) are mutual
+# inverses, so both directions stay shard-local gathers.
+
+@jax.custom_vjp
+def inverse_gather(x, idx, inv_idx, inv_valid):
+    """x: (G,M,D); idx: (G,P) -> (G,P,D); rows with idx clipped/invalid must
+    be masked by the caller.  inv_idx: (G,M) position of each x-row in the
+    output (arbitrary where inv_valid is False)."""
+    return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+
+def _inverse_gather_fwd(x, idx, inv_idx, inv_valid):
+    return inverse_gather(x, idx, inv_idx, inv_valid), (
+        idx, inv_idx, inv_valid)
+
+
+def _inverse_gather_bwd(res, g):
+    idx, inv_idx, inv_valid = res
+    gx = jnp.take_along_axis(g, inv_idx[..., None], axis=1)
+    gx = jnp.where(inv_valid[..., None], gx, 0)
+    return gx, None, None, None
+
+
+inverse_gather.defvjp(_inverse_gather_fwd, _inverse_gather_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_spec(cfg, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    spec = {
+        "w_up": ParamSpec((d, ff), ("embed", "ff")),
+        "w_down": ParamSpec((ff, d), ("ff", "embed")),
+    }
+    if getattr(cfg, "mlp_kind", "gated") == "gated":
+        spec["w_gate"] = ParamSpec((d, ff), ("embed", "ff"))
+    return spec
+
+
+def ffn_apply(params: Dict, x: jax.Array) -> jax.Array:
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if "w_gate" in params:  # SwiGLU
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = silu(g) * u
+    else:                   # plain GELU
+        h = jax.nn.gelu(u)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.moe_num_experts
+    spec = {
+        "router": ParamSpec((d, E), ("embed", "experts"), scale=0.02),
+        "w_gate": ParamSpec((E, d, ff), ("experts", "embed", "ff")),
+        "w_up": ParamSpec((E, d, ff), ("experts", "embed", "ff")),
+        "w_down": ParamSpec((E, ff, d), ("experts", "ff", "embed")),
+    }
+    if cfg.moe_num_shared:
+        shared_ff = ff * cfg.moe_num_shared
+        spec["shared"] = {
+            "w_gate": ParamSpec((d, shared_ff), ("embed", "ff")),
+            "w_up": ParamSpec((d, shared_ff), ("embed", "ff")),
+            "w_down": ParamSpec((shared_ff, d), ("ff", "embed")),
+        }
+    return spec
+
+
+def moe_apply(cfg, params: Dict, x: jax.Array,
+              capacity_factor: Optional[float] = None) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,d) -> (B,S,d), aux dict (load-balance stats/loss).
+
+    Token-choice top-k with normalized softmax gates and capacity dropping.
+    Decode steps (S == 1) get drop-free capacity (C = T): token counts are
+    tiny and drops would corrupt single-token outputs.
+
+    ``cfg.moe_groups`` > 1 enables GShard-style group-local dispatch: tokens
+    split into G groups (aligned with the data shards), each with its own
+    capacity buffer — the dispatch scatter stays shard-local and the expert
+    einsums never psum capacity-buffer-sized partials across the FSDP axis
+    (the difference is TBs of all-reduce at 398B scale; see EXPERIMENTS §Perf
+    cell A).
+    """
+    B, S, d = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    T = B * S
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+    if S == 1 and getattr(cfg, "moe_decode_drop_free", True):
+        capacity_factor = float(E) / K  # C == T: no drops at decode
+    # Group-local mode uses the BATCH dim as the group dim (one sequence ==
+    # one group): no reshape touches the sharded batch axis, so GSPMD keeps
+    # the group dim on the data shards with zero resharding.
+    grouped = bool(getattr(cfg, "moe_groups", 0)) and S > 1
+    if grouped:
+        G, Tg = B, S
+        xt = x
+    else:
+        G, Tg = 1, T
+        xt = x.reshape(1, T, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    N = Tg * K
+    e_flat = expert_idx.reshape(G, N)
+    g_flat = gate_vals.reshape(G, N)
+    C = max(1, int(Tg * K / E * capacity_factor))
+
+    # --- scatter-free dispatch: sort by expert, batched gathers only ---
+    # (GSPMD replicates scatter operands, which at 398B scale turns the
+    # dispatch into TB-scale reshards; sort+gather stays group-local.)
+    sort_idx = jnp.argsort(e_flat, axis=1, stable=True)       # (G,N)
+    counts = (e_flat[:, :, None] == jnp.arange(E)[None, None]).sum(
+        axis=1)                                                # (G,E)
+    offsets = jnp.cumsum(counts, axis=1) - counts              # (G,E)
+    slot_pos = offsets[:, :, None] + jnp.arange(C)[None, None]  # (G,E,C)
+    slot_valid = jnp.arange(C)[None, None] < counts[:, :, None]
+    slot_pos = jnp.clip(slot_pos, 0, N - 1).reshape(G, E * C)
+    src = jnp.take_along_axis(sort_idx, slot_pos, axis=1)       # (G,E*C)
+    slot_valid_f = slot_valid.reshape(G, E * C)
+
+    # token->slot inverse mapping (for the scatter-free VJPs): the rank of
+    # token-k row n within its expert gives its capacity slot
+    rank = jnp.argsort(sort_idx, axis=1)                        # inverse perm
+    slot_c = rank - jnp.take_along_axis(offsets, e_flat, axis=1)
+    keep = slot_c < C
+    flat_idx = e_flat * C + jnp.clip(slot_c, 0, C - 1)          # (G,N)
+
+    x_k = jnp.repeat(xt, K, axis=1)                             # (G,N,d)
+    buf = inverse_gather(x_k, src, flat_idx, keep)              # (G,E*C,d)
+    buf = jnp.where(slot_valid_f[..., None], buf, 0)
+    buf = buf.reshape(G, E, C, d)
+    if grouped:
+        # EP all-to-all: group-sharded -> expert-sharded (GSPMD lowers the
+        # resharding to an all-to-all), run experts local to their weights,
+        # then all-to-all back before the (group-local) combine gather.
+        buf = constrain(buf, ("batch", None, None, None))
+        buf = constrain(buf, (None, "experts", None, None))
+
+    w_gate, w_up, w_down = (params["w_gate"], params["w_up"],
+                            params["w_down"])
+    if grouped:
+        # gather FSDP'd expert weights at use (~400MB/layer) instead of
+        # letting the contraction psum capacity-buffer-sized partials
+        w_gate = constrain(w_gate, ("experts", None, None))
+        w_up = constrain(w_up, ("experts", None, None))
+        w_down = constrain(w_down, ("experts", None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", buf, w_gate)
+    h_u = jnp.einsum("gecd,edf->gecf", buf, w_up)
+    h = silu(h_g) * h_u
+    if grouped:
+        h = constrain(h, (None, "experts", None, "ff"))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, w_down)
+    if grouped:
+        out_buf = constrain(out_buf, (None, "experts", None, None))
+        out_buf = constrain(out_buf, ("batch", None, None, None))
+
+    # --- combine: slots -> tokens (inverse of the dispatch gather) ---
+    g_flat = jnp.where(keep, g_flat, 0.0)
+    y_tok = inverse_gather(out_buf.reshape(G, E * C, d), flat_idx,
+                           src, slot_valid_f)                   # (G,N,d)
+    y = (y_tok * g_flat[..., None].astype(x.dtype)).reshape(
+        G, Tg, K, d).sum(axis=2)
+
+    if cfg.moe_num_shared:
+        y = y + ffn_apply(params["shared"], xt)
+
+    # load-balancing aux loss (Switch-style)
+    density = probs.mean(axis=(0, 1))                           # (E,)
+    sel_frac = counts.astype(jnp.float32).sum(axis=0) / (G * N)  # (E,)
+    aux_loss = E * jnp.sum(density * sel_frac)
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    return y.reshape(B, S, d), {"aux_loss": aux_loss, "drop_frac": dropped}

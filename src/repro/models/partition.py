@@ -1,0 +1,34 @@
+"""Activation-sharding hints for model code.
+
+GSPMD propagates weight shardings well, but some activation layouts need an
+explicit nudge (canonical example: the MoE group dim must follow the data
+shards or the expert einsums psum capacity-buffer-sized partials).  The
+launcher installs (mesh, rules) here; model code calls ``constrain`` with
+logical axis names.  When no hints are installed (single-device tests,
+engines) it's a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+_HINTS = {"mesh": None, "rules": None}
+
+
+def set_mesh_rules(mesh: Optional[Mesh], rules) -> None:
+    _HINTS["mesh"] = mesh
+    _HINTS["rules"] = rules
+
+
+def clear() -> None:
+    set_mesh_rules(None, None)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    mesh, rules = _HINTS["mesh"], _HINTS["rules"]
+    if mesh is None or rules is None:
+        return x
+    spec = rules.spec(tuple(logical_axes), mesh, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

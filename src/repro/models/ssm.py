@@ -1,0 +1,297 @@
+"""Recurrent sequence blocks: Mamba (selective SSM), xLSTM (mLSTM / sLSTM).
+
+All three expose the same API shape as attention blocks:
+  *_prefill(cfg, params, x)          -> (out, final_state)
+  *_decode(cfg, params, x, state)    -> (out, new_state)
+  *_state_init(cfg, batch, dtype)    -> state pytree
+
+Recurrences scan over time with the pointwise projections hoisted out of the
+scan (bulk einsums), so the scan body is only the state update.
+Per-request state is CONSTANT-SIZE — this is what makes the ``long_500k``
+shape tractable for ssm/hybrid archs (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, silu
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, mamba-1 recurrence)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state_dim
+    w = cfg.ssm_conv_width
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ff")),
+        "conv_w": ParamSpec((w, di), ("conv", "ff"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("ff",), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * N), ("ff", None)),
+        "dt_proj": ParamSpec((r, di), (None, "ff")),
+        "dt_bias": ParamSpec((di,), ("ff",), init="zeros"),
+        "a_log": ParamSpec((di, N), ("ff", "state"), init="alog"),
+        "d_skip": ParamSpec((di,), ("ff",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ff", "embed")),
+    }
+
+
+def _mamba_bulk(cfg, params, x):
+    """Pointwise (non-recurrent) part: returns per-step scan inputs."""
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state_dim
+    r = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xs, z = xz[..., :di], xz[..., di:]
+    return xs, z
+
+
+def _mamba_conv_full(cfg, params, xs):
+    """Causal depthwise conv over (B,S,di)."""
+    w = cfg.ssm_conv_width
+    pad = jnp.pad(xs, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xs, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + xs.shape[1]].astype(jnp.float32) \
+            * params["conv_w"][i].astype(jnp.float32)
+    out = out + params["conv_b"].astype(jnp.float32)
+    return silu(out).astype(xs.dtype)
+
+
+def _mamba_ssm_inputs(cfg, params, xc):
+    N = cfg.ssm_state_dim
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("bse,ep->bsp", xc, params["x_proj"])
+    dt_r, Bmat, Cmat = proj[..., :r], proj[..., r:r + N], proj[..., r + N:]
+    dt = jnp.einsum("bsr,re->bse", dt_r, params["dt_proj"]) + params["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def mamba_prefill(cfg, params, x):
+    B, S, d = x.shape
+    xs, z = _mamba_bulk(cfg, params, x)
+    xc = _mamba_conv_full(cfg, params, xs)
+    dt, Bm, Cm = _mamba_ssm_inputs(cfg, params, xc)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))           # (di,N)
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                       # (B,di,N)
+        dBx = (dt_t * xc_t.astype(jnp.float32))[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("ben,bn->be", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, xs.shape[-1], cfg.ssm_state_dim), jnp.float32)
+    xs_t = jnp.swapaxes(xc, 0, 1)
+    inputs = (xs_t, jnp.swapaxes(dt, 0, 1), jnp.swapaxes(Bm, 0, 1),
+              jnp.swapaxes(Cm, 0, 1))
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.swapaxes(ys, 0, 1) + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    w = cfg.ssm_conv_width
+    conv_state = jnp.pad(xs, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):]
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def mamba_decode(cfg, params, x, state):
+    """x: (B,1,d); state: {h: (B,di,N) fp32, conv: (B,w-1,di)}."""
+    B = x.shape[0]
+    w = cfg.ssm_conv_width
+    xs, z = _mamba_bulk(cfg, params, x)                         # (B,1,di)
+    window = jnp.concatenate([state["conv"], xs], axis=1)        # (B,w,di)
+    xc = jnp.einsum("bwe,we->be", window.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32))
+    xc = silu(xc + params["conv_b"].astype(jnp.float32))[:, None, :].astype(x.dtype)
+    dt, Bm, Cm = _mamba_ssm_inputs(cfg, params, xc)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0, :, None] * A)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0][:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("ben,bn->be", h, Cm[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y * silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def mamba_state_init(cfg, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    return {
+        "q": ParamSpec((d, nh, hd), ("embed", "heads", "head_dim")),
+        "k": ParamSpec((d, nh, hd), ("embed", "heads", "head_dim")),
+        "v": ParamSpec((d, nh, hd), ("embed", "heads", "head_dim")),
+        "ig": ParamSpec((d, nh), ("embed", "heads"), scale=0.02),
+        "fg": ParamSpec((d, nh), ("embed", "heads"), scale=0.02),
+        "og": ParamSpec((d, d), ("embed", None)),
+        "out_proj": ParamSpec((d, d), (None, "embed")),
+    }
+
+
+def _mlstm_bulk(cfg, params, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["k"]) / math.sqrt(
+        cfg.d_model // cfg.xlstm_heads)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["v"])
+    ig = jnp.einsum("bsd,dh->bsh", x, params["ig"]).astype(jnp.float32)
+    fg = jnp.einsum("bsd,dh->bsh", x, params["fg"]).astype(jnp.float32)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, params["og"]))
+    return q, k, v, ig, fg, og
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry                               # (B,H,K,V),(B,H,K),(B,H)
+    q_t, k_t, v_t, i_t, f_t = inp
+    logf = jax.nn.log_sigmoid(f_t)                # stable forget in log space
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * kf
+    qf = q_t.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_prefill(cfg, params, x):
+    B, S, d = x.shape
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    q, k, v, ig, fg, og = _mlstm_bulk(cfg, params, x)
+    carry = (jnp.zeros((B, nh, hd, hd), jnp.float32),
+             jnp.zeros((B, nh, hd), jnp.float32),
+             jnp.full((B, nh), -1e30, jnp.float32))
+    sw = lambda a: jnp.swapaxes(a, 0, 1)
+    carry, hs = jax.lax.scan(_mlstm_step, carry,
+                             (sw(q), sw(k), sw(v), sw(ig), sw(fg)))
+    h = jnp.swapaxes(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h * og, params["out_proj"])
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def mlstm_decode(cfg, params, x, state):
+    B = x.shape[0]
+    d = cfg.d_model
+    q, k, v, ig, fg, og = _mlstm_bulk(cfg, params, x)
+    carry = (state["C"], state["n"], state["m"])
+    carry, h = _mlstm_step(carry, (q[:, 0], k[:, 0], v[:, 0],
+                                   ig[:, 0], fg[:, 0]))
+    h = h.reshape(B, 1, d).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h * og, params["out_proj"])
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def mlstm_state_init(cfg, batch: int, dtype):
+    nh = cfg.xlstm_heads
+    hd = cfg.d_model // nh
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell with recurrent gates)
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    return {
+        "w": ParamSpec((d, 4, d), ("embed", None, None), scale=0.02),
+        "r": ParamSpec((nh, 4, hd, hd), ("heads", None, None, None), scale=0.02),
+        "bias": ParamSpec((4, d), (None, "embed"), init="zeros"),
+        "out_proj": ParamSpec((d, d), (None, "embed")),
+    }
+
+
+def _slstm_step(cfg, params, carry, wx_t):
+    """carry: (c,n,m,h) each (B,d) fp32; wx_t: (B,4,d)."""
+    c, n, m, h = carry
+    nh = cfg.xlstm_heads
+    B, d = c.shape
+    hd = d // nh
+    hh = h.reshape(B, nh, hd)
+    rh = jnp.einsum("bhk,hgkl->bghl", hh, params["r"].astype(jnp.float32))
+    pre = wx_t.astype(jnp.float32) + rh.reshape(B, 4, d) \
+        + params["bias"].astype(jnp.float32)
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = jax.nn.log_sigmoid(pre[:, 2])
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_prefill(cfg, params, x):
+    B, S, d = x.shape
+    wx = jnp.einsum("bsd,dge->bsge", x, params["w"])             # (B,S,4,d)
+    carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) + (
+        jnp.zeros((B, d), jnp.float32),)
+    # fix m init
+    carry = (carry[0], carry[1], jnp.full((B, d), -1e30, jnp.float32), carry[3])
+
+    def step(carry, wx_t):
+        new = _slstm_step(cfg, params, carry, wx_t)
+        return new, new[3]
+
+    carry, hs = jax.lax.scan(step, carry, jnp.swapaxes(wx, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, params["out_proj"])
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+
+
+def slstm_decode(cfg, params, x, state):
+    B = x.shape[0]
+    wx = jnp.einsum("bsd,dge->bsge", x, params["w"])
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    new = _slstm_step(cfg, params, carry, wx[:, 0])
+    out = jnp.einsum("bd,de->be", new[3].astype(x.dtype),
+                     params["out_proj"])[:, None, :]
+    return out, {"c": new[0], "n": new[1], "m": new[2], "h": new[3]}
+
+
+def slstm_state_init(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}

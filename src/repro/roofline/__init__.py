@@ -1,0 +1,5 @@
+"""Roofline analysis: analytic FLOPs/bytes + HLO collective accounting."""
+from .analysis import (FlopsOptions, HBM_BW, LINK_BW, PEAK_FLOPS, cell_flops,
+                       cell_hbm_bytes, forward_flops, kv_cache_bytes,
+                       roofline_terms)
+from .hlo import collective_totals, shape_bytes, split_computations

@@ -1,0 +1,191 @@
+"""Post-SPMD HLO text analysis: collective bytes with while-loop trip counts.
+
+XLA emits one module per SPMD program; computations are text blocks
+``%name (...) -> ... {``.  Collectives inside a while body execute
+trip-count times, so we build the computation call graph (while bodies,
+conditionals, calls) and multiply.
+
+Trip counts are recovered heuristically from the while condition: the
+largest integer constant compared against in the condition computation
+(standard XLA canonical loops compare the induction variable with the trip
+count).  Fusion computations cannot contain collectives, so they are
+ignored.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(?P<shape>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+               "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# computation definitions start at column 0: ``%name (args) -> type {`` or
+# ``ENTRY %name (...) -> ... {`` — args may contain nested parens, so only
+# anchor on the name
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%([^\s(]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)"
+    r"|while\([^)]*\)[^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text (brace matched from header lines)."""
+    comps: Dict[str, str] = {}
+    entry_name = None
+    lines = hlo.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i]
+        m = _COMP_HEADER.match(line)  # column 0 anchored
+        if m and "{" in line:
+            name = m.group(2)
+            body = [line]
+            depth = line.count("{") - line.count("}")
+            i += 1
+            while i < len(lines) and depth > 0:
+                body.append(lines[i])
+                depth += lines[i].count("{") - lines[i].count("}")
+                i += 1
+            comps[name] = "\n".join(body)
+            if m.group(1):
+                entry_name = name
+        else:
+            i += 1
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def shape_bytes(shape_text: str) -> int:
+    nbytes = 0
+    for dt, dims in SHAPE_RE.findall(shape_text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes_of(comp_text: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    out: Dict[str, int] = defaultdict(int)
+    count: Dict[str, int] = defaultdict(int)
+    for m in COLLECTIVE_RE.finditer(comp_text):
+        if m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        out[op] += shape_bytes(m.group("shape"))
+        count[op] += 1
+    return dict(out), dict(count)
+
+
+def while_edges(comp_text: str) -> List[Tuple[str, str]]:
+    """[(condition_comp, body_comp)] for each while op in this computation."""
+    edges = []
+    for m in _WHILE_RE.finditer(comp_text):
+        if m.group(1):
+            edges.append((m.group(1), m.group(2)))
+        else:
+            edges.append((m.group(4), m.group(3)))
+    return edges
+
+
+def trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def collective_totals(hlo: str) -> Tuple[Dict[str, int], Dict[str, int], Dict[str, int]]:
+    """(bytes_by_kind, op_count_by_kind, multipliers) — per-device totals
+    with while-loop trip multipliers applied."""
+    comps = split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        b, c = collective_bytes_of(hlo)
+        return b, c, {}
+
+    multipliers: Dict[str, int] = defaultdict(int)
+
+    def visit(name: str, mult: int, depth: int = 0):
+        if depth > 16 or name not in comps:
+            return
+        multipliers[name] += mult
+        text = comps[name]
+        for cond, body in while_edges(text):
+            n = trip_count(comps.get(cond, ""))
+            visit(body, mult * max(n, 1), depth + 1)
+        # call / conditional branches run once per invocation
+        for m in re.finditer(r"(?:to_apply|branch_computations)=\{?%?([\w\.\-]+)",
+                             text):
+            callee = m.group(1)
+            if callee in comps and callee != name:
+                visit(callee, mult, depth + 1)
+
+    entry_name = [k for k, v in comps.items()
+                  if k != "__entry__" and v == entry]
+    visit(entry_name[0] if entry_name else "__entry__", 1)
+    if "__entry__" in multipliers and entry_name:
+        multipliers.pop("__entry__", None)
+
+    total_bytes: Dict[str, int] = defaultdict(int)
+    total_count: Dict[str, int] = defaultdict(int)
+    for name, mult in multipliers.items():
+        if name == "__entry__":
+            continue
+        b, c = collective_bytes_of(comps[name])
+        for k, v in b.items():
+            total_bytes[k] += v * mult
+        for k, v in c.items():
+            total_count[k] += v * mult
+    return dict(total_bytes), dict(total_count), dict(multipliers)
+
+
+def top_collectives(hlo: str, k: int = 12) -> List[Dict]:
+    """Largest collective contributors: (op, shape, per-op bytes, trip
+    multiplier, total bytes, computation) sorted by total bytes."""
+    comps = split_computations(hlo)
+    entry = comps.get("__entry__")
+    rows: List[Dict] = []
+    multipliers: Dict[str, int] = defaultdict(int)
+
+    def visit(name: str, mult: int, depth: int = 0):
+        if depth > 16 or name not in comps:
+            return
+        multipliers[name] += mult
+        text = comps[name]
+        for cond, body in while_edges(text):
+            n = trip_count(comps.get(cond, ""))
+            visit(body, mult * max(n, 1), depth + 1)
+        for m in re.finditer(r"(?:to_apply|branch_computations)=\{?%?([\w\.\-]+)",
+                             text):
+            callee = m.group(1)
+            if callee in comps and callee != name:
+                visit(callee, mult, depth + 1)
+
+    if entry is not None:
+        entry_name = [kk for kk, v in comps.items()
+                      if kk != "__entry__" and v == entry]
+        visit(entry_name[0] if entry_name else "__entry__", 1)
+    for name, mult in multipliers.items():
+        if name == "__entry__":
+            continue
+        for m in COLLECTIVE_RE.finditer(comps[name]):
+            if m.group("suffix") == "-done":
+                continue
+            b = shape_bytes(m.group("shape"))
+            rows.append({"op": m.group("op"),
+                         "shape": m.group("shape").strip()[:70],
+                         "bytes": b, "mult": mult, "total": b * mult,
+                         "computation": name[:40]})
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:k]

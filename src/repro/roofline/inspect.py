@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb profiler: recompile one cell, print the top collectives.
+
+  PYTHONPATH=src python -m repro.roofline.inspect --arch starcoder2_7b \
+      --shape prefill_32k [--mesh single] [--dump PATH] [--extra k=v,...]
+"""
+import argparse
+import json
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.hlo import collective_totals, top_collectives
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--dump", default="")
+    ap.add_argument("--extra", default="", help="k=v,... passed to build_cell")
+    args = ap.parse_args()
+
+    extra = {}
+    for kv in args.extra.split(","):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            extra[k] = (v if not v.replace(".", "").isdigit()
+                        else (int(v) if v.isdigit() else float(v)))
+            if v in ("true", "false"):
+                extra[k] = v == "true"
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cell = build_cell(args.arch, args.shape, mesh, extra=extra or None)
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate_argnums) \
+            .lower(*cell.args).compile()
+    hlo = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+    total, count, _ = collective_totals(hlo)
+    print(f"cell: {cell.description}")
+    print("totals (per device):",
+          {k: f"{v / 1e9:.2f}GB" for k, v in total.items()})
+    print(f"\ntop collectives:")
+    for r in top_collectives(hlo, 14):
+        print(f"  {r['total'] / 1e9:9.3f}GB  x{r['mult']:<6d} {r['op']:20s} "
+              f"{r['shape'][:58]:58s} in {r['computation']}")
+
+
+if __name__ == "__main__":
+    main()

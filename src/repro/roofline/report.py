@@ -1,0 +1,115 @@
+"""Build the EXPERIMENTS.md roofline/dry-run tables from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load_records(dirpath: str, mesh: str = "single",
+                 tag: str = "") -> List[Dict]:
+    out = []
+    for name in sorted(os.listdir(dirpath)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(dirpath, name)) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh and rec.get("tag", "") == tag:
+            out.append(rec)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def roofline_table(records: List[Dict]) -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful FLOPs | roofline frac | bottleneck note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    recs = sorted([r for r in records if r["status"] == "ok"],
+                  key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in recs:
+        rl = r.get("roofline", {})
+        if not rl:
+            continue
+        note = bottleneck_note(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"**{rl['dominant']}** | {rl['useful_frac'] * 100:.0f}% | "
+            f"{rl['roofline_frac'] * 100:.0f}% | {note} |")
+    skipped = [r for r in records if r["status"] == "skipped"]
+    for r in sorted(skipped, key=lambda r: r["arch"]):
+        rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — "
+                    f"| — | {r['reason'][:60]} |")
+    return "\n".join(rows)
+
+
+def bottleneck_note(r: Dict) -> str:
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    if dom == "collective":
+        kinds = r.get("collective_bytes", {})
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return f"{top} dominates ({kinds.get(top, 0) / 1e9:.1f}GB/dev); " \
+               f"overlap or reshard to cut it"
+    if dom == "memory":
+        br = rl.get("hbm_breakdown", {})
+        top = max((k for k in ("params", "activations", "kv")),
+                  key=lambda k: br.get(k, 0))
+        return f"HBM bound by {top}; raise arithmetic intensity (batch/fuse)"
+    if rl["useful_frac"] < 0.6:
+        return "compute bound with mask/remat waste; cut wasted FLOPs"
+    return "compute bound near peak; increase per-chip utilization"
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | params/dev | "
+            "cache/dev | HLO coll (count) |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = sorted(records, key=lambda r: (r["arch"],
+                                          SHAPE_ORDER.index(r["shape"]),
+                                          r["mesh"]))
+    for r in recs:
+        if r["status"] == "ok":
+            pb = r.get("params_bytes_per_device", 0) / 1e9
+            cb = r.get("cache_bytes_per_device", 0) / 1e9
+            cc = sum(r.get("collective_count", {}).values())
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r.get('compile_s', 0):.0f}s | {pb:.2f}GB | "
+                f"{cb:.2f}GB | {cc} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | — | — | — | "
+                        f"{r.get('reason', r.get('error', ''))[:50]} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    dirpath = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    singles = load_records(dirpath, "single")
+    multis = load_records(dirpath, "multi")
+    print("## Roofline (single-pod 16x16, per executed step)\n")
+    print(roofline_table(singles))
+    print("\n## Dry-run summary (single-pod)\n")
+    print(dryrun_table(singles))
+    if multis:
+        print("\n## Dry-run summary (multi-pod 2x16x16)\n")
+        print(dryrun_table(multis))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Serving engine: continuous batching over (partial) layer stacks."""
+from .engine import Engine, EngineConfig, Request
+from .sampling import sample_token

@@ -1,0 +1,160 @@
+"""Per-node serving engine: continuous batching over a layer slice.
+
+This is the JAX analogue of the paper's per-node vLLM worker: each Helix
+compute node runs an Engine over the *contiguous layer range* the MILP
+assigned to it, with iteration-level (continuous) batching and a shared KV
+pool across its local layers (§5.1 "a pool of pages unified for all local
+layers").
+
+The Engine here executes the whole model when given the full range (used by
+the quickstart/serving examples), or a partial stack when given a Helix
+stage (exercised in tests via ``layer_slice``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, init_caches, prefill
+from .sampling import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_s: float = 0.0
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    prompt_len: int = 128                 # static prompt bucket (left-pad)
+    eos_token: int = -1                   # -1 = never stop early
+
+
+class Engine:
+    """Continuous-batching engine with fixed decode slots.
+
+    Slots hold at most ``max_batch`` concurrent requests; prompts are
+    left-padded into a static bucket so prefill compiles once; decode runs
+    one jitted step for all active slots per iteration.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ec = engine_cfg
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * engine_cfg.max_batch
+        self.caches = init_caches(cfg, engine_cfg.max_batch, engine_cfg.max_len)
+        self.positions = jnp.zeros((engine_cfg.max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((engine_cfg.max_batch,), jnp.int32)
+        self.active = np.zeros((engine_cfg.max_batch,), bool)
+        self._rng = np.random.RandomState(rng_seed)
+        self._decode = jax.jit(
+            lambda params, tok, caches, pos: decode_step(cfg, params, tok,
+                                                         caches, pos))
+        self._prefill_one = jax.jit(
+            lambda params, tok: prefill(cfg, params, tok,
+                                        max_len=engine_cfg.max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.submitted_s = time.time()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.ec.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # prefill this request alone (bucketed), then splice its caches
+            # into the slot.  (A production engine would batch prefills；
+            # chunked prefill is an optional follow-up.)
+            prompt = req.prompt[-self.ec.prompt_len:]
+            tok = jnp.asarray(prompt, jnp.int32)[None, :]
+            logits, caches1 = self._prefill_one(self.params, tok)
+            nxt = sample_token(np.asarray(logits)[0], req.temperature,
+                               self._rng)
+            req.output.append(int(nxt))
+            req.first_token_s = time.time()
+            self.caches = jax.tree.map(
+                lambda full, one: _splice_slot(full, one, slot),
+                self.caches, caches1)
+            self.positions = self.positions.at[slot].set(len(prompt))
+            self.tokens = self.tokens.at[slot].set(int(nxt))
+            self.active[slot] = True
+            self.slots[slot] = req
+
+    @staticmethod
+    def _batch_axis(x):
+        return 0
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit + one decode step for active slots.
+        Returns number of tokens produced."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        logits, self.caches = self._decode(self.params, self.tokens,
+                                           self.caches, self.positions)
+        logits = np.asarray(logits)
+        produced = 0
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            nxt = sample_token(logits[slot], req.temperature, self._rng)
+            req.output.append(int(nxt))
+            produced += 1
+            done = (len(req.output) >= req.max_new_tokens
+                    or int(nxt) == self.ec.eos_token)
+            if done:
+                req.done = True
+                req.finished_s = time.time()
+                self.slots[slot] = None
+                self.active[slot] = False
+        self.positions = self.positions + jnp.asarray(
+            self.active.astype(np.int32))
+        new_tokens = np.array(self.tokens)  # writable copy
+        for slot, req in enumerate(self.slots):
+            if req is not None:
+                new_tokens[slot] = req.output[-1]
+        self.tokens = jnp.asarray(new_tokens)
+        return produced
+
+    def run_until_done(self, max_iters: int = 10000) -> None:
+        for _ in range(max_iters):
+            if not self.queue and not self.active.any():
+                return
+            self.step()
+
+
+def _splice_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Copy a single-request cache leaf (batch=1 on some axis) into ``slot``
+    of the engine-wide leaf.  Cache leaves carry batch on axis 0 (prologue)
+    or axis 1 (stacked super-block caches: (repeats, batch, ...))."""
+    if full.ndim == one.ndim and one.shape[0] == 1 \
+            and full.shape[1:] == one.shape[1:]:
+        return full.at[slot].set(one[0])
+    if full.ndim == one.ndim and one.shape[1] == 1 \
+            and full.shape[0] == one.shape[0] \
+            and full.shape[2:] == one.shape[2:]:
+        return full.at[:, slot].set(one[:, 0])
+    raise ValueError(f"cannot splice cache leaf {one.shape} into {full.shape}")

@@ -1,0 +1,4 @@
+"""Event-driven serving simulator for heterogeneous clusters."""
+from .simulator import LinkSim, Metrics, NodeSim, Simulator
+from .traces import (TraceRequest, azure_conversation_lengths, make_offline_trace,
+                     make_trace, online_rate_for_cluster)

@@ -1,0 +1,405 @@
+"""Event-driven simulator for distributed LLM serving on heterogeneous
+clusters (paper §5.1 "Simulator").
+
+Entities:
+  * NodeSim  — a compute node: FIFO batch server at the profiled token rate,
+    with a KV-cache occupancy model (prompt reserves, decode grows, overshoot
+    triggers an offload penalty) mirroring vLLM-style paging behaviour.
+  * LinkSim  — a directed network link: serialization at bandwidth + fixed
+    propagation latency; FIFO queueing captures congestion (the paper's §5.7
+    case study).
+  * Simulator — drives request lifecycles: arrival → per-request pipeline
+    from a scheduler → prompt pass through stages → autoregressive decode
+    passes (chunked by ``decode_chunk`` for speed) → completion.
+
+Fault-tolerance hooks: ``fail_node(t, name)`` kills a node mid-run (in-flight
+requests restart on a replanned placement), ``slow_node(t, name, factor)``
+injects a straggler; both exercise the planner's elastic replanning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.cluster import COORDINATOR, ClusterSpec, ModelProfile
+from ..core.placement import Placement
+from ..core.scheduler import BaseScheduler, RequestPipeline
+from .traces import TraceRequest
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Metrics:
+    warmup_s: float
+    horizon_s: float
+    decoded_tokens: int = 0
+    prompt_tokens: int = 0
+    completed_requests: int = 0
+    prompt_latencies: List[float] = dataclasses.field(default_factory=list)
+    decode_latencies: List[float] = dataclasses.field(default_factory=list)
+    node_busy_s: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    link_queue_s: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    link_transfers: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    restarts: int = 0
+
+    @property
+    def measure_window_s(self) -> float:
+        return max(1e-9, self.horizon_s - self.warmup_s)
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.decoded_tokens / self.measure_window_s
+
+    @property
+    def processed_throughput(self) -> float:
+        """Prompt + decode tokens per second — comparable to the max-flow
+        bound, which counts every token passing through the cluster."""
+        return (self.decoded_tokens + self.prompt_tokens) / self.measure_window_s
+
+    def _stats(self, xs: List[float]) -> Dict[str, float]:
+        if not xs:
+            return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        s = sorted(xs)
+        pick = lambda q: s[min(len(s) - 1, int(q * len(s)))]
+        return {"mean": sum(s) / len(s), "p50": pick(0.5), "p90": pick(0.9),
+                "p99": pick(0.99)}
+
+    @property
+    def prompt_latency(self) -> Dict[str, float]:
+        return self._stats(self.prompt_latencies)
+
+    @property
+    def decode_latency(self) -> Dict[str, float]:
+        return self._stats(self.decode_latencies)
+
+    def node_utilization(self, horizon: Optional[float] = None) -> Dict[str, float]:
+        h = horizon or self.horizon_s
+        return {n: b / max(h, 1e-9) for n, b in sorted(self.node_busy_s.items())}
+
+
+# ---------------------------------------------------------------------------
+# Servers
+# ---------------------------------------------------------------------------
+
+class NodeSim:
+    def __init__(self, name: str, rate_tokens_per_s: float,
+                 kv_capacity_tokens: float, batch_token_cap: float = 4096,
+                 batch_overhead_s: float = 0.015,
+                 offload_penalty: float = 0.25):
+        self.name = name
+        self.rate = rate_tokens_per_s
+        self.kv_capacity = kv_capacity_tokens
+        self.kv_used = 0.0
+        self.batch_token_cap = batch_token_cap
+        self.batch_overhead_s = batch_overhead_s
+        self.offload_penalty = offload_penalty
+        self.pending: deque = deque()   # (work_units, kv_grow, callback)
+        self.kv_wait: deque = deque()   # (work_units, kv_need, kv_grow, callback)
+        self.busy_until = 0.0
+        self.alive = True
+        self.speed_factor = 1.0
+
+    def effective_rate(self) -> float:
+        rate = self.rate * self.speed_factor
+        if self.kv_capacity > 0 and self.kv_used > self.kv_capacity:
+            rate *= self.offload_penalty  # paging to host memory
+        return max(rate, 1e-6)
+
+
+class LinkSim:
+    def __init__(self, src: str, dst: str, bandwidth: float, latency: float):
+        self.src = src
+        self.dst = dst
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.busy_until = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Request state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _ReqState:
+    trace: TraceRequest
+    pipeline: RequestPipeline
+    arrival_s: float
+    phase: str = "prompt"            # prompt | decode
+    stage_idx: int = 0
+    decoded: int = 0                 # output tokens completed
+    first_token_s: Optional[float] = None
+    kv_reserved_nodes: Tuple[str, ...] = ()
+    restarted: int = 0
+
+
+class Simulator:
+    def __init__(self, cluster: ClusterSpec, model: ModelProfile,
+                 placement: Placement, scheduler: BaseScheduler,
+                 *, decode_chunk: int = 4, warmup_s: float = 30.0,
+                 horizon_s: float = 600.0, batch_overhead_s: float = 0.015,
+                 kv_output_estimate: int = 256, param_frac: float = 0.5,
+                 replan_fn: Optional[Callable] = None,
+                 max_decode_tokens: Optional[int] = None):
+        self.cluster = cluster
+        self.model = model
+        self.placement = placement
+        self.scheduler = scheduler
+        self.decode_chunk = decode_chunk
+        self.warmup_s = warmup_s
+        self.horizon_s = horizon_s
+        self.kv_output_estimate = kv_output_estimate
+        self.replan_fn = replan_fn
+        self.max_decode_tokens = max_decode_tokens
+
+        self.nodes: Dict[str, NodeSim] = {}
+        for name, rng in placement.assignment.items():
+            rate = cluster.node_token_throughput(name, model, rng.num_layers)
+            vram = cluster.nodes[name].vram_bytes
+            free = max(0.0, vram - rng.num_layers * model.layer_param_bytes)
+            per_tok = model.kv_bytes_per_token_layer * rng.num_layers
+            kv_cap = free / per_tok if per_tok > 0 else float("inf")
+            self.nodes[name] = NodeSim(name, rate, kv_cap,
+                                       batch_overhead_s=batch_overhead_s)
+        self.links: Dict[Tuple[str, str], LinkSim] = {}
+        for (src, dst), spec in cluster.links.items():
+            self.links[(src, dst)] = LinkSim(src, dst,
+                                             spec.bandwidth_bytes_per_s,
+                                             spec.latency_s)
+
+        self.metrics = Metrics(warmup_s=warmup_s, horizon_s=horizon_s)
+        self._events: List = []
+        self._seq = 0
+        self._now = 0.0
+
+    # -- event machinery ----------------------------------------------------
+    def _push(self, t: float, fn: Callable, *args) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, fn, args))
+
+    # -- network ------------------------------------------------------------
+    def _transfer(self, src: str, dst: str, nbytes: float,
+                  deliver: Callable) -> None:
+        link = self.links.get((src, dst))
+        if link is None:  # same node / missing link: instant
+            self._push(self._now, deliver)
+            return
+        start = max(self._now, link.busy_until)
+        queue_delay = start - self._now
+        ser = nbytes / link.bandwidth
+        link.busy_until = start + ser
+        if self._now >= self.warmup_s:
+            self.metrics.link_queue_s[(src, dst)] += queue_delay
+            self.metrics.link_transfers[(src, dst)] += 1
+        self._push(link.busy_until + link.latency, deliver)
+
+    # -- node batch server ----------------------------------------------------
+    def _enqueue_work(self, node: str, work_units: float, kv_need: float,
+                      kv_grow: float, done: Callable) -> None:
+        ns = self.nodes[node]
+        if not ns.alive:
+            return  # dropped; failure handler restarts the request
+        if kv_need > 0 and ns.kv_used + kv_need > ns.kv_capacity:
+            ns.kv_wait.append((work_units, kv_need, kv_grow, done))
+            return
+        ns.kv_used += kv_need + kv_grow
+        ns.pending.append((work_units, done))
+        self._kick(node)
+
+    def _kick(self, node: str) -> None:
+        ns = self.nodes[node]
+        if not ns.alive or not ns.pending or ns.busy_until > self._now:
+            return
+        batch, tokens = [], 0.0
+        while ns.pending and tokens < ns.batch_token_cap:
+            w, cb = ns.pending.popleft()
+            batch.append(cb)
+            tokens += w
+        dur = tokens / ns.effective_rate() + ns.batch_overhead_s
+        ns.busy_until = self._now + dur
+        if self._now >= self.warmup_s:
+            self.metrics.node_busy_s[node] += dur
+        self._push(ns.busy_until, self._batch_done, node, batch)
+
+    def _batch_done(self, node: str, batch: List[Callable]) -> None:
+        ns = self.nodes[node]
+        if not ns.alive:
+            return
+        for cb in batch:
+            cb()
+        # admit kv-waiters whose reservation now fits
+        moved = True
+        while moved and ns.kv_wait:
+            moved = False
+            w, need, grow, cb = ns.kv_wait[0]
+            if ns.kv_used + need <= ns.kv_capacity:
+                ns.kv_wait.popleft()
+                ns.kv_used += need + grow
+                ns.pending.append((w, cb))
+                moved = True
+        self._kick(node)
+
+    # -- request lifecycle ----------------------------------------------------
+    def _arrive(self, req: TraceRequest) -> None:
+        try:
+            pipeline = self.scheduler.schedule(
+                prompt_tokens=req.input_tokens + self.kv_output_estimate)
+        except RuntimeError:
+            # no route available (e.g. mid-replan): retry shortly
+            self._push(self._now + 0.5, self._arrive, req)
+            return
+        state = _ReqState(trace=req, pipeline=pipeline, arrival_s=self._now,
+                          kv_reserved_nodes=pipeline.nodes)
+        # coordinator -> first stage: token ids
+        nbytes = req.input_tokens * self.model.token_bytes
+        self._transfer(COORDINATOR, pipeline.stages[0].node, nbytes,
+                       lambda: self._stage_work(state))
+
+    def _stage_work(self, state: _ReqState) -> None:
+        """Run the current stage for the current phase."""
+        st = state.pipeline.stages[state.stage_idx]
+        ns = self.nodes.get(st.node)
+        if ns is None or not ns.alive:
+            self._restart(state)
+            return
+        held = self.placement.assignment[st.node].num_layers
+        frac = st.layers.num_layers / max(held, 1)
+        if state.phase == "prompt":
+            tokens = state.trace.input_tokens
+            kv_need = tokens + min(self.kv_output_estimate,
+                                   state.trace.output_tokens)
+            kv_grow = 0.0
+        else:
+            tokens = min(self.decode_chunk,
+                         state.trace.output_tokens - state.decoded)
+            kv_need = 0.0
+            # decode grows KV once past the scheduler's reservation estimate
+            past_estimate = state.decoded + tokens > self.kv_output_estimate
+            kv_grow = float(tokens) if past_estimate else 0.0
+        work = tokens * frac
+        self._enqueue_work(st.node, work, kv_need, kv_grow,
+                           lambda: self._stage_done(state))
+
+    def _stage_done(self, state: _ReqState) -> None:
+        pipe = state.pipeline
+        st = pipe.stages[state.stage_idx]
+        last = state.stage_idx == len(pipe.stages) - 1
+        if not last:
+            nxt = pipe.stages[state.stage_idx + 1].node
+            if state.phase == "prompt":
+                nbytes = state.trace.input_tokens * self.model.activation_bytes
+            else:
+                nbytes = self.decode_chunk * self.model.activation_bytes
+            state.stage_idx += 1
+            self._transfer(st.node, nxt, nbytes,
+                           lambda: self._stage_work(state))
+            return
+        # pipeline pass complete -> token(s) to coordinator
+        nbytes = self.model.token_bytes * (1 if state.phase == "prompt"
+                                           else self.decode_chunk)
+        self._transfer(st.node, COORDINATOR, nbytes,
+                       lambda: self._pass_done(state))
+
+    def _pass_done(self, state: _ReqState) -> None:
+        if state.phase == "prompt":
+            state.first_token_s = self._now
+            state.decoded = 1  # prompt pass emits the first output token
+            if self._now >= self.warmup_s:
+                self.metrics.prompt_latencies.append(
+                    self._now - state.arrival_s)
+                self.metrics.decoded_tokens += 1
+                self.metrics.prompt_tokens += state.trace.input_tokens
+            state.phase = "decode"
+        else:
+            produced = min(self.decode_chunk,
+                           state.trace.output_tokens - state.decoded)
+            state.decoded += produced
+            if self._now >= self.warmup_s:
+                self.metrics.decoded_tokens += produced
+        limit = state.trace.output_tokens
+        if self.max_decode_tokens is not None:
+            limit = min(limit, self.max_decode_tokens)
+        if state.decoded >= limit:
+            self._complete(state)
+            return
+        state.stage_idx = 0
+        # next decode iteration: coordinator -> first stage (token ids)
+        self._transfer(COORDINATOR, state.pipeline.stages[0].node,
+                       self.model.token_bytes * self.decode_chunk,
+                       lambda: self._stage_work(state))
+
+    def _complete(self, state: _ReqState) -> None:
+        if self._now >= self.warmup_s:
+            self.metrics.completed_requests += 1
+            if state.first_token_s is not None and state.decoded > 1:
+                per_tok = (self._now - state.first_token_s) / max(
+                    1, state.decoded - 1)
+                self.metrics.decode_latencies.append(per_tok)
+        total = state.trace.input_tokens + state.decoded
+        for node in set(state.kv_reserved_nodes):
+            ns = self.nodes.get(node)
+            if ns is not None:
+                ns.kv_used = max(0.0, ns.kv_used - (
+                    state.trace.input_tokens + min(self.kv_output_estimate,
+                                                   state.trace.output_tokens)
+                    + max(0, state.decoded - self.kv_output_estimate)))
+            self.scheduler.finish(state.pipeline, total)
+
+    def _restart(self, state: _ReqState) -> None:
+        """Request lost a node mid-flight: restart from the prompt phase on a
+        freshly scheduled pipeline (KV on dead node is gone)."""
+        self.metrics.restarts += 1
+        state.restarted += 1
+        if state.restarted > 5:
+            return  # drop pathological requests
+        retry = TraceRequest(state.trace.request_id, self._now,
+                             state.trace.input_tokens,
+                             max(1, state.trace.output_tokens - state.decoded))
+        self._push(self._now + 0.1, self._arrive, retry)
+
+    # -- fault injection -------------------------------------------------------
+    def fail_node(self, t: float, name: str) -> None:
+        self._push(t, self._do_fail, name)
+
+    def _do_fail(self, name: str) -> None:
+        ns = self.nodes.get(name)
+        if ns is None:
+            return
+        ns.alive = False
+        ns.pending.clear()
+        ns.kv_wait.clear()
+        if self.replan_fn is not None:
+            new_sched, new_placement = self.replan_fn(name)
+            self.scheduler = new_sched
+            self.placement = new_placement
+            for n, rng in new_placement.assignment.items():
+                if n in self.nodes and self.nodes[n].alive:
+                    self.nodes[n].rate = self.cluster.node_token_throughput(
+                        n, self.model, rng.num_layers)
+
+    def slow_node(self, t: float, name: str, factor: float) -> None:
+        self._push(t, self._do_slow, name, factor)
+
+    def _do_slow(self, name: str, factor: float) -> None:
+        ns = self.nodes.get(name)
+        if ns is not None:
+            ns.speed_factor = factor
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, trace: List[TraceRequest]) -> Metrics:
+        for req in trace:
+            self._push(req.arrival_s, self._arrive, req)
+        while self._events:
+            t, _, fn, args = heapq.heappop(self._events)
+            if t > self.horizon_s:
+                break
+            self._now = t
+            fn(*args)
+        self.metrics.horizon_s = min(self.horizon_s, max(self._now,
+                                                         self.warmup_s))
+        return self.metrics

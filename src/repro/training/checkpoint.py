@@ -1,0 +1,145 @@
+"""Sharded checkpointing with atomic commit and restart support.
+
+Layout (one directory per step):
+    <dir>/step_000120.tmp/...   (write)
+    <dir>/step_000120/          (atomic rename on success)
+        index.msgpack           tree structure + shapes/dtypes + metadata
+        arr_00000.npy ...       one file per leaf (np.save)
+
+Writes can run on a background thread (async checkpointing) so the train
+loop does not stall; ``wait()`` joins before the next save.  Restore picks
+the newest complete step directory — interrupted writes are invisible
+because of the rename commit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(directory: str, step: int, tree, metadata: Optional[Dict] = None
+         ) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten_with_paths(tree)
+    index = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        path = os.path.join(tmp, f"arr_{i:05d}.npy")
+        np.save(path, arr)
+        index["leaves"].append({"dtype": str(arr.dtype),
+                                "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb(index))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "index.msgpack")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: Optional[int], tree_template
+            ) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_template`` (shapes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+    leaves_t, treedef = _flatten_with_paths(tree_template)
+    assert index["num_leaves"] == len(leaves_t), \
+        f"leaf count mismatch: ckpt {index['num_leaves']} vs template {len(leaves_t)}"
+    out = []
+    for i, (meta, tmpl) in enumerate(zip(index["leaves"], leaves_t)):
+        arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+        if arr.dtype.kind == "V":
+            # numpy round-trips ml_dtypes (bfloat16 etc.) as raw void;
+            # view back using the recorded dtype name
+            import ml_dtypes
+            try:
+                arr = arr.view(np.dtype(meta["dtype"]))
+            except TypeError:
+                arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        expect = tuple(tmpl.shape) if hasattr(tmpl, "shape") else None
+        if expect is not None and tuple(arr.shape) != expect:
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {expect}")
+        dtype = tmpl.dtype if hasattr(tmpl, "dtype") else arr.dtype
+        out.append(jnp.asarray(arr, dtype=dtype))
+    return jax.tree.unflatten(treedef, out), step, index["metadata"]
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (overlap with training)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save_async(self, step: int, tree, metadata: Optional[Dict] = None):
+        self.wait()
+        # device_get on the caller thread (arrays may be donated next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _run():
+            try:
+                save(self.directory, step, host_tree, metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,165 @@
+"""Optimizers in pure JAX: AdamW and Adafactor (factored second moment).
+
+Adafactor is the default for >=30B-parameter archs — full Adam state
+(8 bytes/param fp32 m+v) does not fit a 16 GB/chip v5e pod for the 236B/398B
+assigned configs, while Adafactor's row/col factored second moment is
+~O(rows+cols) per matrix (DESIGN.md §5).  Both support optional optimizer-
+state dtype control and global-norm clipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+    state_dtype: str = "float32"     # float32 | bfloat16 (for adamw m/v)
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(cfg: OptimizerConfig, params):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moment
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(cfg: OptimizerConfig, params):
+    # state is a flat LIST aligned with jax.tree.leaves(params) — nesting it
+    # into the param tree would make the factored/{v} dicts ambiguous with
+    # param dicts that contain a "v" key (attention blocks do).
+    def state_for(p):
+        if _factored(p.shape, cfg.min_dim_factored):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": [state_for(p) for p in jax.tree.leaves(params)],
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_rate)
+    eps = 1e-30
+
+    def upd(g, s, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * s["v"] + (1 - beta2) * g2
+            new_s = {"v": vhat}
+        update = gf / jnp.sqrt(vhat + eps)
+        # relative step clipping (RMS-1)
+        rms = jnp.sqrt(jnp.mean(update * update))
+        update = update / jnp.maximum(1.0, rms)
+        p_new = p.astype(jnp.float32) - lr * update \
+            - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return p_new.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, state["v"], flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = [o[1] for o in out]
+    return new_p, {"v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptimizerConfig, params):
+    return adamw_init(cfg, params) if cfg.name == "adamw" \
+        else adafactor_init(cfg, params)
+
+
+def opt_update(cfg: OptimizerConfig, grads, state, params):
+    return adamw_update(cfg, grads, state, params) if cfg.name == "adamw" \
+        else adafactor_update(cfg, grads, state, params)

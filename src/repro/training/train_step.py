@@ -1,0 +1,82 @@
+"""Train step: loss -> grad -> optimizer, with remat and microbatching.
+
+``make_train_step`` returns a pure function suitable for jax.jit with
+in/out shardings from repro.dist.sharding.  Remat policy wraps the
+super-block scan body (configured through jax.checkpoint around loss_fn).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import loss_fn
+from .optimizer import OptimizerConfig, opt_init, opt_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    remat: str = "full"              # full | dots | none
+    microbatches: int = 1            # sequential grad accumulation
+    skip_masked_chunks: bool = False # halve causal-attention FLOPs
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def make_loss(cfg: ModelConfig, train: TrainConfig) -> Callable:
+    base = functools.partial(loss_fn, cfg,
+                             skip_masked_chunks=train.skip_masked_chunks)
+    if train.remat != "none":
+        base = jax.checkpoint(base, policy=_remat_policy(train.remat),
+                              static_argnums=())
+    return base
+
+
+def make_train_step(cfg: ModelConfig, train: TrainConfig) -> Callable:
+    loss = make_loss(cfg, train)
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if train.microbatches > 1:
+            mb = train.microbatches
+            B = batch["tokens"].shape[0]
+            assert B % mb == 0, (B, mb)
+            split = {k: v.reshape(mb, B // mb, *v.shape[1:])
+                     for k, v in batch.items()}
+
+            def micro(acc, sub):
+                (l, m), g = grad_fn(params, sub)
+                g_acc, l_acc = acc
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / mb, g_acc, g)
+                return (g_acc, l_acc + l / mb), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_val), _ = jax.lax.scan(micro,
+                                                (g0, jnp.zeros((), jnp.float32)),
+                                                split)
+            metrics = {"ce": loss_val}
+        else:
+            (loss_val, metrics), grads = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = opt_update(
+            train.optimizer, grads, opt_state, params)
+        out_metrics = {"loss": loss_val, **metrics, **opt_metrics}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, train: TrainConfig, params):
+    return opt_init(train.optimizer, params)

@@ -1,0 +1,182 @@
+"""Graph abstraction, heuristic placements, and MILP placement tests."""
+import pytest
+
+from repro.core import (COORDINATOR, LLAMA_30B, LLAMA_70B, MILPOptions,
+                        ModelProfile, Placement, LayerRange, build_graph,
+                        compute_upper_bound, make_distributed_cluster,
+                        make_high_heterogeneity_cluster, make_single_cluster,
+                        make_tpu_pod_cluster, petals_placement,
+                        placement_throughput, plan,
+                        separate_pipelines_placement, solve_placement,
+                        swarm_placement)
+from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, LinkSpec, NodeSpec
+from repro.core.cluster import _full_mesh_links
+
+
+def tiny_cluster(devs=("A100", "T4", "T4")):
+    nodes, regions = {}, {COORDINATOR: "r0"}
+    for i, d in enumerate(devs):
+        name = f"n{i}"
+        nodes[name] = NodeSpec(name, DEVICE_PROFILES[d], region="r0")
+        regions[name] = "r0"
+    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3, 10e9 / 8, 1e-3)
+    return ClusterSpec(nodes=nodes, links=links)
+
+
+def small_model(num_layers=8):
+    return ModelProfile.from_dims("toy", num_layers=num_layers, d_model=4096,
+                                  d_ff=11008, vocab=32000, n_kv_heads=32,
+                                  head_dim=128)
+
+
+# --- placement heuristics ---------------------------------------------------
+
+def test_swarm_placement_valid():
+    cluster = make_single_cluster()
+    p = swarm_placement(cluster, LLAMA_30B)
+    assert p.validate() == []
+
+
+def test_petals_placement_valid():
+    cluster = make_single_cluster()
+    p = petals_placement(cluster, LLAMA_30B)
+    assert p.validate() == []
+
+
+def test_separate_pipelines_valid_30b():
+    cluster = make_single_cluster()
+    p = separate_pipelines_placement(cluster, LLAMA_30B)
+    assert p.validate() == []
+
+
+def test_separate_pipelines_mixed_tail():
+    cluster = make_high_heterogeneity_cluster()
+    p = separate_pipelines_placement(cluster, LLAMA_70B, allow_mixed_tail=True)
+    assert p.validate() == []
+
+
+# --- graph abstraction -------------------------------------------------------
+
+def test_graph_throughput_single_node_bound():
+    """One node holding the whole model: throughput == node capacity."""
+    cluster = tiny_cluster(("A100",))
+    model = small_model(4)
+    p = Placement({"n0": LayerRange(0, 4)}, 4)
+    tput = placement_throughput(cluster, model, p)
+    expected = cluster.node_token_throughput("n0", model, 4)
+    # coordinator links are far faster than compute here
+    assert tput == pytest.approx(expected, rel=1e-6)
+
+
+def test_graph_throughput_additive_replicas():
+    """Two identical nodes each holding the full model: throughput doubles."""
+    cluster = tiny_cluster(("T4", "T4"))
+    model = small_model(2)
+    p = Placement({"n0": LayerRange(0, 2), "n1": LayerRange(0, 2)}, 2)
+    tput = placement_throughput(cluster, model, p)
+    single = cluster.node_token_throughput("n0", model, 2)
+    assert tput == pytest.approx(2 * single, rel=1e-6)
+
+
+def test_graph_pipeline_bottleneck():
+    """Two-stage pipeline: throughput == min(stage capacities)."""
+    cluster = tiny_cluster(("A100", "T4"))
+    model = small_model(8)
+    p = Placement({"n0": LayerRange(0, 4), "n1": LayerRange(4, 8)}, 8)
+    tput = placement_throughput(cluster, model, p)
+    c0 = cluster.node_token_throughput("n0", model, 4)
+    c1 = cluster.node_token_throughput("n1", model, 4)
+    link = cluster.link_token_capacity("n0", "n1", model)
+    assert tput == pytest.approx(min(c0, c1, link), rel=1e-6)
+
+
+def test_invalid_placement_zero_throughput():
+    cluster = tiny_cluster(("A100",))
+    model = small_model(8)
+    p = Placement({"n0": LayerRange(0, 4)}, 8)  # misses layers 4..8
+    assert placement_throughput(cluster, model, p) == 0.0
+
+
+def test_partial_inference_allows_overlap():
+    """n0 holds [0,6), n1 holds [4,8): valid only with partial inference."""
+    cluster = tiny_cluster(("A100", "A100"))
+    model = small_model(8)
+    p = Placement({"n0": LayerRange(0, 6), "n1": LayerRange(4, 8)}, 8)
+    with_partial = placement_throughput(cluster, model, p, True)
+    without = placement_throughput(cluster, model, p, False)
+    assert with_partial > 0.0
+    assert without == 0.0
+
+
+# --- MILP --------------------------------------------------------------------
+
+def test_milp_beats_or_matches_heuristics_small():
+    cluster = tiny_cluster(("A100", "L4", "T4", "T4"))
+    model = small_model(8)
+    opts = MILPOptions(time_limit_s=20.0, lns_rounds=0)
+    result = solve_placement(cluster, model, opts)
+    assert result.placement.validate() == []
+    for name, fn in [("swarm", swarm_placement), ("petals", petals_placement)]:
+        t = placement_throughput(cluster, model, fn(cluster, model))
+        assert result.actual_throughput >= t * 0.999, name
+
+
+def test_milp_respects_upper_bound():
+    cluster = tiny_cluster(("T4", "T4"))
+    model = small_model(4)
+    result = solve_placement(cluster, model,
+                             MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    ub = compute_upper_bound(cluster, model)
+    assert result.actual_throughput <= ub * 1.001
+
+
+def test_milp_single_node_holds_all():
+    cluster = tiny_cluster(("A100",))
+    model = small_model(4)
+    result = solve_placement(cluster, model,
+                             MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    assert result.placement.assignment["n0"] == LayerRange(0, 4)
+
+
+def test_plan_end_to_end():
+    cluster = tiny_cluster(("A100", "L4", "T4", "T4"))
+    model = small_model(8)
+    p = plan(cluster, model, MILPOptions(time_limit_s=20.0, lns_rounds=1))
+    assert p.throughput > 0
+    # flows out of coordinator equal total throughput
+    src_flow = sum(f for (u, v), f in p.flows.items() if u == COORDINATOR)
+    assert src_flow == pytest.approx(p.throughput, rel=1e-6)
+
+
+def test_milp_matches_bruteforce_on_tiny_cluster():
+    """Exhaustively enumerate placements on a tiny instance; the MILP must
+    find a placement whose max flow matches the brute-force optimum."""
+    import itertools
+    cluster = tiny_cluster(("T4", "T4", "L4"))
+    model = small_model(4)
+    opts = MILPOptions(time_limit_s=30.0, lns_rounds=0, fgls_rounds=0,
+                       prune_degree=None, mip_rel_gap=1e-6)
+    result = solve_placement(cluster, model, opts)
+
+    names = sorted(cluster.nodes)
+    k_of = {n: min(4, cluster.max_layers_on(n, model, 0.5)) for n in names}
+    ranges = {n: [LayerRange(s, s + l)
+                  for l in range(1, k_of[n] + 1)
+                  for s in range(0, 4 - l + 1)] for n in names}
+    best = 0.0
+    for combo in itertools.product(*(ranges[n] for n in names)):
+        p = Placement(dict(zip(names, combo)), 4)
+        if p.validate():
+            continue
+        best = max(best, placement_throughput(cluster, model, p))
+    assert result.actual_throughput == pytest.approx(best, rel=1e-4)
+
+
+def test_fgls_improves_or_keeps_heuristic():
+    from repro.core.local_search import FGLSOptions, refine_placement
+    cluster = make_single_cluster()
+    p0 = petals_placement(cluster, LLAMA_70B)
+    t0 = placement_throughput(cluster, LLAMA_70B, p0)
+    p1, t1, _ = refine_placement(cluster, LLAMA_70B, p0, FGLSOptions(rounds=20))
+    assert t1 >= t0 * 0.999
+    assert p1.validate() == []

@@ -1,0 +1,157 @@
+"""Pallas kernel validation (interpret=True on CPU) against jnp oracles.
+
+Per assignment: sweep shapes/dtypes per kernel, assert_allclose vs ref.py.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+from repro.kernels.paged_attention import (dense_to_pages, paged_attention,
+                                           paged_attention_ref)
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _mk_qkv(key, B, H, KH, Sq, Sk, D, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, H, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, KH, Sk, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, KH, Sk, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+# --- flash attention sweeps --------------------------------------------------
+
+FLASH_SHAPES = [
+    # B, H, KH, Sq, Sk, D, causal, window
+    (1, 4, 4, 128, 128, 64, True, 0),
+    (2, 8, 2, 256, 256, 128, True, 0),       # GQA
+    (1, 4, 1, 128, 128, 128, True, 0),       # MQA
+    (2, 4, 4, 128, 128, 64, False, 0),       # bidirectional
+    (1, 4, 2, 256, 256, 64, True, 100),      # sliding window
+    (1, 2, 2, 200, 200, 64, True, 0),        # ragged (pad to blocks)
+    (1, 2, 2, 96, 160, 64, False, 0),        # cross lengths
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+def test_flash_attention_matches_ref(shape, dtype):
+    B, H, KH, Sq, Sk, D, causal, window = shape
+    q, k, v = _mk_qkv(jax.random.key(0), B, H, KH, Sq, Sk, D, dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_kv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    q, k, v = _mk_qkv(jax.random.key(1), 1, 4, 2, 256, 256, 64, jnp.float32)
+    outs = []
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (128, 128), (256, 256)]:
+        outs.append(flash_attention(q, k, v, causal=True, block_q=bq,
+                                    block_kv=bk, interpret=True))
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 3), st.booleans())
+def test_flash_attention_property(b, g_pow, causal):
+    """Random GQA configs vs oracle (hypothesis sweep)."""
+    KH = 2
+    H = KH * (2 ** g_pow)
+    q, k, v = _mk_qkv(jax.random.key(b * 7 + g_pow), b, H, KH, 128, 128, 64,
+                      jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --- paged attention sweeps --------------------------------------------------
+
+PAGED_SHAPES = [
+    # B, H, KH, S(max), page, D
+    (2, 4, 4, 256, 64, 64),
+    (3, 8, 2, 256, 64, 128),                 # GQA
+    (1, 4, 1, 512, 128, 64),                 # MQA
+    (4, 2, 2, 128, 32, 128),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", PAGED_SHAPES)
+def test_paged_attention_matches_ref(shape, dtype):
+    B, H, KH, S, page, D = shape
+    key = jax.random.key(42)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = jax.random.normal(k1, (B, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, S, KH, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, S, KH, D), jnp.float32).astype(dtype)
+    lengths = jax.random.randint(k4, (B,), 1, S + 1)
+    k_pages, v_pages, tables = dense_to_pages(k, v, lengths, page)
+    out = paged_attention(q, k_pages, v_pages, tables, lengths,
+                          interpret=True)
+    ref = paged_attention_ref(q, k_pages, v_pages, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_paged_attention_scrambled_pages():
+    """Same logical KV, different physical page layout -> same output
+    (the whole point of paging)."""
+    B, H, KH, S, page, D = 2, 4, 2, 256, 64, 64
+    key = jax.random.key(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, S, KH, D))
+    v = jax.random.normal(k3, (B, S, KH, D))
+    lengths = jnp.array([200, 130], jnp.int32)
+    k_pages, v_pages, tables = dense_to_pages(k, v, lengths, page)
+    out1 = paged_attention(q, k_pages, v_pages, tables, lengths,
+                           interpret=True)
+    # scramble physical page order with a permutation
+    P = k_pages.shape[0]
+    perm = jax.random.permutation(jax.random.key(9), P)
+    inv = jnp.argsort(perm)
+    out2 = paged_attention(q, k_pages[perm], v_pages[perm], inv[tables],
+                           lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_matches_dense_decode():
+    """Paged decode == dense cache attention at the same positions."""
+    import math
+    B, H, KH, S, page, D = 2, 8, 4, 128, 32, 64
+    key = jax.random.key(11)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, S, KH, D))
+    v = jax.random.normal(k3, (B, S, KH, D))
+    lengths = jnp.array([100, 64], jnp.int32)
+    k_pages, v_pages, tables = dense_to_pages(k, v, lengths, page)
+    out = paged_attention(q, k_pages, v_pages, tables, lengths,
+                          interpret=True)
+    # dense reference
+    G = H // KH
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k) / math.sqrt(D)
+    mask = jnp.arange(S)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bhgs,bshd->bhgd", p, v).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,105 @@
+"""Preflow-push max flow: unit tests + hypothesis property tests vs networkx."""
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maxflow import FlowNetwork, max_flow, preflow_push
+
+
+def test_single_edge():
+    value, flow = max_flow({("s", "t"): 5.0}, "s", "t")
+    assert value == pytest.approx(5.0)
+    assert flow[("s", "t")] == pytest.approx(5.0)
+
+
+def test_series_bottleneck():
+    value, _ = max_flow({("s", "a"): 10.0, ("a", "t"): 3.0}, "s", "t")
+    assert value == pytest.approx(3.0)
+
+
+def test_parallel_paths():
+    edges = {("s", "a"): 4.0, ("a", "t"): 4.0,
+             ("s", "b"): 6.0, ("b", "t"): 5.0}
+    value, _ = max_flow(edges, "s", "t")
+    assert value == pytest.approx(9.0)
+
+
+def test_classic_diamond():
+    edges = {("s", "a"): 10, ("s", "b"): 10, ("a", "b"): 1,
+             ("a", "t"): 8, ("b", "t"): 10}
+    value, _ = max_flow(edges, "s", "t")
+    # min cut = {a->t, b->t} = 18
+    assert value == pytest.approx(18.0)
+
+
+def test_disconnected():
+    value, flow = max_flow({("s", "a"): 5.0, ("b", "t"): 5.0}, "s", "t")
+    assert value == pytest.approx(0.0)
+
+
+def test_missing_source():
+    value, flow = max_flow({("a", "b"): 1.0}, "s", "t")
+    assert value == 0.0
+
+
+def _flow_conservation_ok(edges, flow, source, sink):
+    from collections import defaultdict
+    net = defaultdict(float)
+    for (u, v), f in flow.items():
+        net[u] -= f
+        net[v] += f
+    for node, bal in net.items():
+        if node in (source, sink):
+            continue
+        assert abs(bal) < 1e-6, f"conservation violated at {node}: {bal}"
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(min_value=2, max_value=10))
+    nodes = list(range(n))
+    m = draw(st.integers(min_value=1, max_value=min(30, n * (n - 1))))
+    edges = {}
+    for _ in range(m):
+        u = draw(st.integers(min_value=0, max_value=n - 1))
+        v = draw(st.integers(min_value=0, max_value=n - 1))
+        if u == v:
+            continue
+        cap = draw(st.floats(min_value=0.1, max_value=100.0,
+                             allow_nan=False, allow_infinity=False))
+        edges[(u, v)] = edges.get((u, v), 0.0) + cap
+    return n, edges
+
+
+@settings(max_examples=80, deadline=None)
+@given(random_graphs())
+def test_matches_networkx(graph):
+    n, edges = graph
+    source, sink = 0, n - 1
+    value, flow = max_flow(edges, source, sink)
+
+    G = nx.DiGraph()
+    G.add_nodes_from(range(n))
+    for (u, v), c in edges.items():
+        if G.has_edge(u, v):
+            G[u][v]["capacity"] += c
+        else:
+            G.add_edge(u, v, capacity=c)
+    expected = nx.maximum_flow_value(G, source, sink)
+    assert value == pytest.approx(expected, rel=1e-6, abs=1e-6)
+    # flow legality: capacity + conservation
+    for (u, v), f in flow.items():
+        assert f <= edges.get((u, v), 0.0) + 1e-6
+        assert f >= -1e-9
+    _flow_conservation_ok(edges, flow, source, sink)
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_graphs())
+def test_flow_value_equals_source_outflow(graph):
+    n, edges = graph
+    source, sink = 0, n - 1
+    value, flow = max_flow(edges, source, sink)
+    out = sum(f for (u, v), f in flow.items() if u == source)
+    back = sum(f for (u, v), f in flow.items() if v == source)
+    assert value == pytest.approx(out - back, rel=1e-6, abs=1e-6)

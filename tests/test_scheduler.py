@@ -1,0 +1,141 @@
+"""IWRR per-request pipeline scheduler tests (+ hypothesis properties)."""
+import collections
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COORDINATOR, IWRR, HelixScheduler, KVEstimator,
+                        LayerRange, MILPOptions, ModelProfile, Placement,
+                        RandomScheduler, SwarmScheduler, plan)
+from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
+from repro.core.cluster import _full_mesh_links
+
+
+def make_cluster(devs):
+    nodes, regions = {}, {COORDINATOR: "r0"}
+    for i, d in enumerate(devs):
+        name = f"n{i}"
+        nodes[name] = NodeSpec(name, DEVICE_PROFILES[d], region="r0")
+        regions[name] = "r0"
+    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3, 10e9 / 8, 1e-3)
+    return ClusterSpec(nodes=nodes, links=links)
+
+
+def small_model(num_layers=8):
+    return ModelProfile.from_dims("toy", num_layers=num_layers, d_model=4096,
+                                  d_ff=11008, vocab=32000, n_kv_heads=32,
+                                  head_dim=128)
+
+
+# --- IWRR properties ---------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=0.5, max_value=50.0), min_size=1,
+                max_size=6))
+def test_iwrr_frequencies_proportional_to_weights(weights):
+    cands = [f"c{i}" for i in range(len(weights))]
+    iwrr = IWRR(cands, weights)
+    n = 5000
+    counts = collections.Counter(iwrr.pick() for _ in range(n))
+    total_w = sum(weights)
+    for c, w in zip(cands, weights):
+        expected = n * w / total_w
+        # IWRR is deterministic: counts within 1 period of expected
+        assert abs(counts[c] - expected) <= total_w / min(weights) + 2
+
+
+def test_iwrr_no_bursts_for_equal_weights():
+    iwrr = IWRR(["a", "b"], [1.0, 1.0])
+    seq = [iwrr.pick() for _ in range(10)]
+    for x, y in zip(seq, seq[1:]):
+        assert x != y, f"burst in {seq}"
+
+
+def test_iwrr_respects_mask():
+    iwrr = IWRR(["a", "b"], [1.0, 1.0])
+    for _ in range(5):
+        assert iwrr.pick(masked={"a"}) == "b"
+
+
+def test_iwrr_all_masked_returns_none():
+    iwrr = IWRR(["a"], [1.0])
+    assert iwrr.pick(masked={"a"}) is None
+
+
+# --- pipeline construction ---------------------------------------------------
+
+def _plan(devs, layers):
+    cluster = make_cluster(devs)
+    model = small_model(layers)
+    return plan(cluster, model, MILPOptions(time_limit_s=15.0, lns_rounds=0))
+
+
+def test_helix_pipelines_always_valid():
+    p = _plan(("A100", "L4", "T4", "T4"), 8)
+    sched = p.make_scheduler()
+    for _ in range(200):
+        pipe = sched.schedule(prompt_tokens=128)
+        assert pipe.validate(p.model.num_layers) == []
+        sched.finish(pipe, 128)
+
+
+def test_swarm_and_random_pipelines_valid():
+    p = _plan(("A100", "L4", "T4", "T4"), 8)
+    for cls in (SwarmScheduler, RandomScheduler):
+        sched = cls(p.cluster, p.model, p.placement)
+        for _ in range(100):
+            pipe = sched.schedule()
+            assert pipe.validate(p.model.num_layers) == []
+
+
+def test_helix_respects_flow_proportions():
+    """Node usage frequency across many requests approximates edge flows."""
+    p = _plan(("A100", "T4", "T4", "T4"), 4)
+    sched = p.make_scheduler(with_kv_estimation=False)
+    counts = collections.Counter()
+    n = 2000
+    for _ in range(n):
+        pipe = sched.schedule()
+        for st_ in pipe.stages:
+            counts[st_.node] += 1
+    # first-hop flow fractions
+    first_flows = {v: f for (u, v), f in p.flows.items() if u == COORDINATOR}
+    total = sum(first_flows.values())
+    for node, f in first_flows.items():
+        # node appears at least as often as its first-hop share
+        assert counts[node] >= 0.8 * n * f / total - 5
+
+
+def test_kv_masking_blocks_saturated_node():
+    p = _plan(("A100", "A100"), 4)
+    sched = p.make_scheduler()
+    # saturate n0's KV estimate
+    cap = sched.kv.capacity_tokens["n0"]
+    sched.kv.reserve("n0", cap)
+    for _ in range(20):
+        pipe = sched.schedule()
+        assert "n0" not in pipe.nodes
+
+
+def test_kv_release_restores_node():
+    p = _plan(("A100", "A100"), 4)
+    sched = p.make_scheduler()
+    cap = sched.kv.capacity_tokens["n0"]
+    sched.kv.reserve("n0", cap)
+    sched.kv.release("n0", cap)
+    seen = set()
+    for _ in range(50):
+        seen.update(sched.schedule().nodes)
+    assert "n0" in seen
+
+
+def test_update_weights_swaps_routing():
+    p = _plan(("A100", "A100"), 4)
+    sched = p.make_scheduler(with_kv_estimation=False)
+    # zero out flow to n1: all requests go through n0
+    flows = {k: (0.0 if "n1" in k else v) for k, v in p.flows.items()}
+    flows[(COORDINATOR, "n0")] = 1.0
+    flows[("n0", COORDINATOR)] = 1.0
+    sched.update_weights(flows)
+    for _ in range(20):
+        assert sched.schedule().nodes == ("n0",)
