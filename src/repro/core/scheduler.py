@@ -179,15 +179,22 @@ class HelixScheduler(BaseScheduler):
                  kv_estimator: Optional[KVEstimator] = None):
         super().__init__(cluster, model, placement, partial_inference,
                          kv_estimator)
-        self.flows = dict(flows)
-        self._iwrr: Dict[str, IWRR] = {}
+        self._build_iwrr(flows)
+
+    def _build_iwrr(self, flows: Mapping[Tuple[str, str], float]) -> None:
+        """(Re)build per-node IWRR instances from edge flows.  The new table
+        is assembled fully before being installed, so concurrent ``schedule``
+        calls never observe a half-built state."""
+        iwrr: Dict[str, IWRR] = {}
         by_src: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
-        for (u, v), f in self.flows.items():
+        for (u, v), f in flows.items():
             if v != COORDINATOR and f > 1e-9:
                 by_src[u].append((v, f))
         for u, cands in by_src.items():
             cands.sort()
-            self._iwrr[u] = IWRR([c for c, _ in cands], [w for _, w in cands])
+            iwrr[u] = IWRR([c for c, _ in cands], [w for _, w in cands])
+        self.flows = dict(flows)
+        self._iwrr = iwrr
 
     def schedule(self, prompt_tokens: int = 0) -> RequestPipeline:
         masked = self.kv.masked_nodes() if self.kv else set()
@@ -220,9 +227,9 @@ class HelixScheduler(BaseScheduler):
                 self.kv.release(st.node, total_tokens)
 
     def update_weights(self, flows: Mapping[Tuple[str, str], float]) -> None:
-        """Atomically swap IWRR weights (used by elastic replanning)."""
-        self.__init__(self.cluster, self.model, self.placement, flows,
-                      self.partial_inference, self.kv)
+        """Atomically swap IWRR weights (used by elastic replanning) without
+        rebuilding the topology graph or the KV estimator."""
+        self._build_iwrr(flows)
 
 
 class SwarmScheduler(BaseScheduler):

@@ -1,0 +1,21 @@
+"""Distribution layer: logical-axis sharding rules, Helix-placement-driven
+pipeline parallelism, and compressed collectives.
+
+See README.md in this directory for the logical-axis vocabulary and the
+rule tables.
+"""
+from .collectives import compressed_psum, dequantize_int8, quantize_int8
+from .sharding import (LONG_CONTEXT_RULES, SERVE_RULES, TRAIN_RULES,
+                       ShardingRules, moe_variant, opt_state_shardings,
+                       sharding_for, tree_shardings)
+from .pipeline import (PipelineConfig, flatten_pipeline_params,
+                       make_pipeline_loss, pipeline_param_specs,
+                       stage_units_from_placement)
+
+__all__ = [
+    "compressed_psum", "quantize_int8", "dequantize_int8",
+    "ShardingRules", "TRAIN_RULES", "SERVE_RULES", "LONG_CONTEXT_RULES",
+    "moe_variant", "sharding_for", "tree_shardings", "opt_state_shardings",
+    "PipelineConfig", "make_pipeline_loss", "pipeline_param_specs",
+    "stage_units_from_placement", "flatten_pipeline_params",
+]

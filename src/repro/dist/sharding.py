@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules: the single translation point between model
+code (which names tensor dims with the logical vocabulary in
+``models/common.py``) and a concrete device mesh.
+
+A ``ShardingRules`` table maps each logical axis name to a mesh axis (or a
+tuple of mesh axes, or ``None`` for replicated).  ``spec`` applies a table to
+one tensor, enforcing the two invariants the rest of the stack relies on:
+
+* **divisibility fallback** — a dim that a mesh axis does not divide evenly
+  is replicated instead of erroring, so smoke configs (15 heads, 30-dim
+  embeds) run on any mesh;
+* **no duplicate mesh axes** — each mesh axis is assigned at most once per
+  tensor, first (leftmost) logical axis wins, later claims replicate.
+
+Mesh axes named in a rule but absent from the mesh are skipped (a
+``("pod", "data")`` batch rule degrades gracefully on a 2-axis mesh).
+
+Tables:
+  TRAIN_RULES        FSDP over "data" (params shard their embed dim) + TP
+                     over "model" (heads/ff/experts/vocab).
+  SERVE_RULES        pure TP: params replicated across "data" (each data
+                     replica serves its own batch shard), KV caches shard
+                     batch over "data" and kv_heads over "model".
+  LONG_CONTEXT_RULES batch=1 sequence parallelism: KV caches shard their
+                     sequence dim over "model", weights shard over
+                     "pod"/"data" instead.
+  moe_variant(base)  expert parallelism: experts spread over the full
+                     ("data", "model") mesh, expert-local dims replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered (logical axis -> mesh axes) table."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def lookup(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for rule_name, mesh_axes in self.rules:
+            if rule_name == name:
+                return mesh_axes
+        return None
+
+    def spec(self, axes: Sequence[Optional[str]], mesh: Mesh,
+             shape: Sequence[int]) -> P:
+        """PartitionSpec for one tensor of ``shape`` with logical ``axes``.
+
+        Applies divisibility fallback and the no-duplicate-mesh-axis
+        invariant; trailing replicated dims are stripped so fully-replicated
+        tensors get the canonical ``P()``.
+        """
+        assert len(axes) == len(shape), (axes, shape)
+        sizes = dict(zip(mesh.axis_names, mesh.shape.values())) \
+            if hasattr(mesh.shape, "values") else dict(
+                zip(mesh.axis_names, mesh.devices.shape))
+        used: set = set()
+        entries: list = []
+        for dim, name in zip(shape, axes):
+            mapped = self.lookup(name)
+            if mapped is None:
+                entries.append(None)
+                continue
+            cand = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            # skip mesh axes this mesh does not have at all
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                entries.append(None)
+                continue
+            total = 1
+            for a in cand:
+                total *= sizes[a]
+            if total <= 0 or dim % total != 0:
+                entries.append(None)
+                continue
+            used.update(cand)
+            entries.append(cand[0] if len(cand) == 1 else cand)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+
+def sharding_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 rules: ShardingRules, mesh: Mesh) -> NamedSharding:
+    """NamedSharding for one tensor (see ``ShardingRules.spec``)."""
+    return NamedSharding(mesh, rules.spec(tuple(axes), mesh, tuple(shape)))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("embed", "data"),          # FSDP: param embed dims shard over data
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", "model"),
+    ("ff", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("layers", None),           # scan axis stays on-device
+    ("stage", "stage"),         # pipeline stage axis (dist.pipeline meshes)
+    ("state", None),
+    ("conv", None),
+    ("lora", None),
+))
+
+SERVE_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("embed", None),            # params replicated across data replicas
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", "model"),
+    ("ff", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("layers", None),
+    ("stage", "stage"),
+    ("state", None),
+    ("conv", None),
+    ("lora", "model"),
+))
+
+LONG_CONTEXT_RULES = ShardingRules(rules=(
+    ("batch", None),            # long-context decode is batch=1
+    ("seq", "model"),           # KV cache shards along sequence
+    ("embed", None),
+    ("heads", ("pod", "data")),
+    ("kv_heads", ("pod", "data")),
+    ("head_dim", None),
+    ("ff", ("pod", "data")),
+    ("experts", ("pod", "data")),
+    ("vocab", ("pod", "data")),
+    ("layers", None),
+    ("stage", "stage"),
+    ("state", None),
+    ("conv", None),
+    ("lora", None),
+))
+
+
+def moe_variant(base: ShardingRules) -> ShardingRules:
+    """Expert-parallel variant: experts spread over the whole (data, model)
+    mesh so each device holds E / (data*model) experts; per-expert dims
+    (already claimed mesh axes) replicate via the duplicate-axis rule."""
+    return ShardingRules(rules=tuple(
+        (name, ("data", "model")) if name == "experts" else (name, ax)
+        for name, ax in base.rules))
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers (used by launch.steps cell building and the train/serve
+# drivers to turn ParamSpec logical axes into jit in/out shardings)
+# ---------------------------------------------------------------------------
+
+def tree_shardings(shapes, axes, rules: ShardingRules, mesh: Mesh):
+    """Map matching (shape-tree, logical-axes-tree) to NamedShardings."""
+    return jax.tree.map(
+        lambda s, ax: sharding_for(tuple(s.shape), tuple(ax), rules, mesh),
+        shapes, axes,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def opt_state_shardings(opt_cfg, params_abs, params_axes, params_sh,
+                        rules: ShardingRules, mesh: Mesh):
+    """Optimizer-state shardings derived from param logical axes.
+
+    AdamW m/v mirror the params; Adafactor's factored second moments drop
+    the last (vr) / second-to-last (vc) dims and inherit the remaining axes.
+    """
+    from ..training.optimizer import _factored
+    rep = NamedSharding(mesh, P())
+    if opt_cfg.name == "adamw":
+        return {"m": params_sh, "v": params_sh, "step": rep}
+    flat_p = jax.tree.leaves(params_abs)
+    flat_ax = jax.tree.structure(params_abs).flatten_up_to(params_axes)
+    v = []
+    for p, ax in zip(flat_p, flat_ax):
+        ax = tuple(ax)
+        if _factored(p.shape, opt_cfg.min_dim_factored):
+            v.append({
+                "vr": sharding_for(p.shape[:-1], ax[:-1], rules, mesh),
+                "vc": sharding_for(p.shape[:-2] + p.shape[-1:],
+                                   ax[:-2] + ax[-1:], rules, mesh),
+            })
+        else:
+            v.append({"v": sharding_for(p.shape, ax, rules, mesh)})
+    return {"v": v, "step": rep}

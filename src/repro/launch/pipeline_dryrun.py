@@ -15,6 +15,7 @@ of a ("stage","data") pipeline; the GPipe-style loss lowers + compiles at
 """
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -31,16 +32,31 @@ from repro.models.common import abstract_shapes
 from repro.roofline.hlo import collective_totals
 
 
-def make_tpu_stage_cluster(num_nodes: int) -> ClusterSpec:
+def make_tpu_stage_cluster(num_nodes: int, model: ModelProfile,
+                           headroom: float = 1.25,
+                           param_frac: float = 0.5) -> ClusterSpec:
     """Heterogeneous TPU-slice cluster: alternating 4-chip and 1-chip v5e
     slices (incremental fleet), one Helix node per slice; VRAM forces a
-    genuine pipeline (no slice can hold the whole model)."""
+    genuine pipeline (no slice can hold the whole model).
+
+    Slice HBM is derated so the whole fleet holds ``headroom`` x the model:
+    4-chip slices get a 2:1 layer budget over 1-chip ones, which is what
+    makes the MILP hand out *unequal* stage sizes."""
+    import dataclasses as dc
     kinds = ["TPUv5e-4", "TPUv5e"]
+    weights = [2 if i % 2 == 0 else 1 for i in range(num_nodes)]
+    total_w = sum(weights)
     nodes, regions = {}, {COORDINATOR: "r0"}
     for i in range(num_nodes):
         name = f"slice-{i}"
-        nodes[name] = NodeSpec(name, DEVICE_PROFILES[kinds[i % 2]],
-                               region="r0")
+        cap_layers = max(1, math.ceil(
+            model.num_layers * headroom * weights[i] / total_w))
+        cap_layers = min(cap_layers, model.num_layers - 1) \
+            if num_nodes > 1 else model.num_layers
+        dev = dc.replace(
+            DEVICE_PROFILES[kinds[i % 2]],
+            vram_bytes=cap_layers * model.layer_param_bytes / param_frac)
+        nodes[name] = NodeSpec(name, dev, region="r0")
         regions[name] = "r0"
     links = _full_mesh_links(list(nodes), regions, 6.25e9, 1e-4,
                              6.25e9, 1e-4)
@@ -58,10 +74,10 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    cluster = make_tpu_stage_cluster(args.stages)
     profile = ModelProfile.from_dims(
         cfg.name, cfg.repeats, cfg.d_model, max(cfg.d_ff, 1),
         cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    cluster = make_tpu_stage_cluster(args.stages, profile)
 
     print(f"planning {args.stages}-slice heterogeneous chain for {cfg.name}")
     result = solve_placement(cluster, profile, MILPOptions(
@@ -71,11 +87,24 @@ def main() -> None:
     units = stage_units_from_placement(result.placement, cfg, order)
     print(f"stage units from MILP placement (4-chip slices get more): "
           f"{units}")
+    # placements may use fewer nodes than requested stages; zero-unit
+    # stages are identity pass-throughs in the pipeline
+    units = units + [0] * (args.stages - len(units))
 
+    if 512 % args.stages:
+        raise SystemExit(f"--stages {args.stages} must divide the 512-chip "
+                         f"mesh")
+    data_dim = 512 // args.stages
+    if args.batch % data_dim:
+        raise SystemExit(f"--batch {args.batch} must be divisible by the "
+                         f"data-axis size ({data_dim})")
+    microbatches = math.gcd(args.microbatches, args.batch // data_dim)
+    if microbatches != args.microbatches:
+        print(f"clamping microbatches {args.microbatches} -> {microbatches} "
+              f"(per-data-shard batch is {args.batch // data_dim})")
     pipe = PipelineConfig(num_stages=args.stages, stage_units=tuple(units),
-                          num_microbatches=args.microbatches)
-    mesh = jax.make_mesh((args.stages, 512 // args.stages),
-                         ("stage", "data"))
+                          num_microbatches=microbatches)
+    mesh = jax.make_mesh((args.stages, data_dim), ("stage", "data"))
     specs = pipeline_param_specs(cfg, pipe)
     params_abs = abstract_shapes(specs, cfg.param_dtype)
     batch_abs = {

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.dist.sharding import SERVE_RULES
-from repro.launch.steps import abstract_params, _tree_shardings
+from repro.dist.sharding import SERVE_RULES, tree_shardings
+from repro.launch.steps import abstract_params
 from repro.models import decode_step, init, init_caches, prefill
 from repro.models import model as M
 
@@ -41,7 +41,7 @@ def main() -> None:
     print(f"mesh {dict(zip(axes, dims))}; serving {cfg.name}")
 
     params_abs, params_axes = abstract_params(cfg)
-    params_sh = _tree_shardings(params_abs, params_axes, SERVE_RULES, mesh)
+    params_sh = tree_shardings(params_abs, params_axes, SERVE_RULES, mesh)
 
     with mesh:
         params = jax.jit(lambda k: init(cfg, k),

@@ -19,12 +19,13 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from ..configs import get_config
 from ..configs.base import ModelConfig
 from ..dist.sharding import (LONG_CONTEXT_RULES, SERVE_RULES, TRAIN_RULES,
-                             ShardingRules, moe_variant, sharding_for)
+                             ShardingRules, moe_variant, opt_state_shardings,
+                             tree_shardings)
 from ..models import model as M
 from ..models.common import abstract_shapes, logical_axes
 from ..training.optimizer import OptimizerConfig, opt_init
@@ -112,38 +113,6 @@ def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
     return shapes, axes
 
 
-def _tree_shardings(shapes, axes, rules: ShardingRules, mesh: Mesh):
-    return jax.tree.map(
-        lambda s, ax: sharding_for(tuple(s.shape), tuple(ax), rules, mesh),
-        shapes, axes,
-        is_leaf=lambda x: hasattr(x, "shape"))
-
-
-def opt_state_shardings(opt_cfg: OptimizerConfig, params_abs, params_axes,
-                        params_sh, rules: ShardingRules, mesh: Mesh):
-    """Optimizer-state shardings derived from param logical axes.
-
-    AdamW m/v mirror the params; Adafactor's factored second moments drop
-    the last (vr) / second-to-last (vc) dims and inherit the remaining axes.
-    """
-    from ..training.optimizer import _factored
-    rep = NamedSharding(mesh, P())
-    if opt_cfg.name == "adamw":
-        return {"m": params_sh, "v": params_sh, "step": rep}
-    flat_p = jax.tree.leaves(params_abs)
-    flat_ax = jax.tree.structure(params_abs).flatten_up_to(params_axes)
-    v = []
-    for p, ax in zip(flat_p, flat_ax):
-        ax = tuple(ax)
-        if _factored(p.shape, opt_cfg.min_dim_factored):
-            v.append({
-                "vr": sharding_for(p.shape[:-1], ax[:-1], rules, mesh),
-                "vc": sharding_for(p.shape[:-2] + p.shape[-1:],
-                                   ax[:-2] + ax[-1:], rules, mesh),
-            })
-        else:
-            v.append({"v": sharding_for(p.shape, ax, rules, mesh)})
-    return {"v": v, "step": rep}
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +189,7 @@ def build_cell(arch: str, shape: str, mesh: Mesh,
     partition.set_mesh_rules(mesh, rules)
 
     params_abs, params_axes = abstract_params(cfg)
-    params_sh = _tree_shardings(params_abs, params_axes, rules, mesh)
+    params_sh = tree_shardings(params_abs, params_axes, rules, mesh)
     inputs = input_specs(arch, shape)
 
     if kind == "train":
@@ -268,7 +237,7 @@ def build_cell(arch: str, shape: str, mesh: Mesh,
 
     # decode
     caches_abs, caches_axes = abstract_caches(cfg, B, S)
-    caches_sh = _tree_shardings(caches_abs, caches_axes, rules, mesh)
+    caches_sh = tree_shardings(caches_abs, caches_axes, rules, mesh)
     tok_sh = NamedSharding(mesh, rules.spec(("batch",), mesh, (B,)))
 
     def decode_fn(params, tokens, caches, cache_pos):

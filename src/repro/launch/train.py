@@ -18,13 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.dist.sharding import TRAIN_RULES
-from repro.launch.steps import (abstract_params, opt_state_shardings,
-                                optimizer_for, _tree_shardings)
+from repro.launch.steps import optimizer_for
 from repro.models import init
 from repro.training import (AsyncCheckpointer, DataConfig, TrainConfig,
                             init_train_state, latest_step, make_batch,
-                            make_train_step, restore)
+                            make_sharded_train_step, restore)
 
 
 def main() -> None:
@@ -53,20 +51,13 @@ def main() -> None:
           f"({cfg.param_count() / 1e6:.1f}M params)")
 
     tc = TrainConfig(optimizer=optimizer_for(cfg), remat="full")
-    params_abs, params_axes = abstract_params(cfg)
-    params_sh = _tree_shardings(params_abs, params_axes, TRAIN_RULES, mesh)
-    opt_sh = opt_state_shardings(tc.optimizer, params_abs, params_axes,
-                                 params_sh, TRAIN_RULES, mesh)
+    step_fn, params_sh, opt_sh = make_sharded_train_step(cfg, tc, mesh)
 
     with mesh:
         params = jax.jit(lambda k: init(cfg, k),
                          out_shardings=params_sh)(jax.random.key(0))
         opt_state = jax.jit(lambda p: init_train_state(cfg, tc, p),
                             out_shardings=opt_sh)(params)
-        step_fn = jax.jit(make_train_step(cfg, tc),
-                          in_shardings=(params_sh, opt_sh, None),
-                          out_shardings=(params_sh, opt_sh, None),
-                          donate_argnums=(0, 1))
 
         dc = DataConfig(vocab_size=cfg.vocab_size, batch_size=args.batch,
                         seq_len=args.seq)

@@ -12,7 +12,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 _HINTS = {"mesh": None, "rules": None}
 
@@ -30,5 +30,8 @@ def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]):
     mesh, rules = _HINTS["mesh"], _HINTS["rules"]
     if mesh is None or rules is None:
         return x
-    spec = rules.spec(tuple(logical_axes), mesh, tuple(x.shape))
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    # lazy import: models <- dist.pipeline <- dist <- here would cycle at
+    # module load; by constrain time both packages are fully initialized
+    from ..dist.sharding import sharding_for
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(tuple(x.shape), tuple(logical_axes), rules, mesh))

@@ -85,7 +85,7 @@ class Engine:
                 continue
             req = self.queue.popleft()
             # prefill this request alone (bucketed), then splice its caches
-            # into the slot.  (A production engine would batch prefills；
+            # into the slot.  (A production engine would batch prefills;
             # chunked prefill is an optional follow-up.)
             prompt = req.prompt[-self.ec.prompt_len:]
             tok = jnp.asarray(prompt, jnp.int32)[None, :]

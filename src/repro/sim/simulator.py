@@ -348,7 +348,8 @@ class Simulator:
                     state.trace.input_tokens + min(self.kv_output_estimate,
                                                    state.trace.output_tokens)
                     + max(0, state.decoded - self.kv_output_estimate)))
-            self.scheduler.finish(state.pipeline, total)
+        # scheduler KV reservations are per request, not per pipeline node
+        self.scheduler.finish(state.pipeline, total)
 
     def _restart(self, state: _ReqState) -> None:
         """Request lost a node mid-flight: restart from the prompt phase on a

@@ -4,4 +4,5 @@ from .data import DataConfig, batch_iterator, make_batch
 from .optimizer import (OptimizerConfig, adafactor_init, adafactor_update,
                         adamw_init, adamw_update, global_norm, lr_at,
                         opt_init, opt_update)
-from .train_step import TrainConfig, init_train_state, make_train_step
+from .train_step import (TrainConfig, init_train_state,
+                         make_sharded_train_step, make_train_step)

@@ -80,3 +80,32 @@ def make_train_step(cfg: ModelConfig, train: TrainConfig) -> Callable:
 
 def init_train_state(cfg: ModelConfig, train: TrainConfig, params):
     return opt_init(train.optimizer, params)
+
+
+def make_sharded_train_step(cfg: ModelConfig, train: TrainConfig, mesh,
+                            rules=None, donate: bool = True):
+    """jit-compiled train step with in/out shardings derived from the
+    distribution layer's logical-axis rules.
+
+    Returns ``(step_fn, params_sh, opt_sh)`` — the shardings are also what
+    ``init``/``opt_init`` outputs should be placed with (see launch.train).
+    """
+    # function-level import: repro.dist.sharding reaches back into
+    # repro.training.optimizer for the Adafactor factoring predicate
+    from ..dist.sharding import (TRAIN_RULES, opt_state_shardings,
+                                 tree_shardings)
+    from ..models.common import abstract_shapes, logical_axes
+    from ..models.model import param_specs
+
+    rules = rules or TRAIN_RULES
+    specs = param_specs(cfg)
+    params_abs = abstract_shapes(specs, cfg.param_dtype)
+    params_axes = logical_axes(specs)
+    params_sh = tree_shardings(params_abs, params_axes, rules, mesh)
+    opt_sh = opt_state_shardings(train.optimizer, params_abs, params_axes,
+                                 params_sh, rules, mesh)
+    step = jax.jit(make_train_step(cfg, train),
+                   in_shardings=(params_sh, opt_sh, None),
+                   out_shardings=(params_sh, opt_sh, None),
+                   donate_argnums=(0, 1) if donate else ())
+    return step, params_sh, opt_sh

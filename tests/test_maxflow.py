@@ -1,6 +1,8 @@
 """Preflow-push max flow: unit tests + hypothesis property tests vs networkx."""
 import networkx as nx
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.maxflow import FlowNetwork, max_flow, preflow_push

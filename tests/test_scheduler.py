@@ -2,6 +2,8 @@
 import collections
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (COORDINATOR, IWRR, HelixScheduler, KVEstimator,

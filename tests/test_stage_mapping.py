@@ -1,0 +1,84 @@
+"""Placement -> pipeline-stage mapping and IWRR proportionality.
+
+Pure-Python coverage of the Helix glue: MILP layer ranges becoming unequal
+GPipe stage sizes (repro.dist.pipeline.stage_units_from_placement) and the
+flow-weighted interleaved round-robin the runtime scheduler picks next hops
+with (repro.core.scheduler.IWRR).  No devices needed.
+"""
+import collections
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.placement import LayerRange, Placement
+from repro.core.scheduler import IWRR
+from repro.dist.pipeline import PipelineConfig, stage_units_from_placement
+
+
+def test_uneven_placement():
+    cfg = get_smoke_config("smollm_360m")          # pattern len 1, repeats 4
+    placement = Placement({"big": LayerRange(0, 3),
+                           "small": LayerRange(3, 4)}, 4)
+    assert stage_units_from_placement(placement, cfg,
+                                      ["big", "small"]) == [3, 1]
+
+
+def test_raw_layer_placement_pattern_len_1():
+    """mixtral: pattern length 1, so raw layers == super-block units."""
+    cfg = get_smoke_config("mixtral_8x22b")        # pattern len 1, repeats 4
+    placement = Placement({"a": LayerRange(0, 1), "b": LayerRange(1, 4)}, 4)
+    assert stage_units_from_placement(placement, cfg, ["a", "b"]) == [1, 3]
+
+
+def test_raw_layer_placement_pattern_len_gt_1():
+    """jamba smoke: 4-block super-pattern x 2 repeats = 8 raw layers; the
+    planner's raw-layer ranges collapse to super-block stage units."""
+    cfg = get_smoke_config("jamba_1_5_large_398b")
+    assert len(cfg.pattern) == 4 and cfg.repeats == 2
+    placement = Placement({"a": LayerRange(0, 4), "b": LayerRange(4, 8)}, 8)
+    assert stage_units_from_placement(placement, cfg, ["a", "b"]) == [1, 1]
+    # a boundary inside a super-block is not pipelineable
+    bad = Placement({"a": LayerRange(0, 3), "b": LayerRange(3, 8)}, 8)
+    with pytest.raises(ValueError, match="super-block"):
+        stage_units_from_placement(bad, cfg, ["a", "b"])
+
+
+def test_single_node_degenerates_to_one_stage():
+    cfg = get_smoke_config("smollm_360m")
+    placement = Placement({"solo": LayerRange(0, 4)}, 4)
+    units = stage_units_from_placement(placement, cfg, ["solo"])
+    assert units == [cfg.repeats]
+    pipe = PipelineConfig(num_stages=1, stage_units=tuple(units),
+                          num_microbatches=2)
+    assert pipe.max_units == cfg.repeats
+
+
+def test_replicated_node_uses_partial_inference():
+    """A node fully covered by its predecessors contributes no stage; a
+    partially overlapping one contributes only the uncovered tail (§3.3)."""
+    cfg = get_smoke_config("smollm_360m")
+    placement = Placement({"a": LayerRange(0, 3), "dup": LayerRange(1, 3),
+                           "b": LayerRange(2, 4)}, 4)
+    assert stage_units_from_placement(placement, cfg,
+                                      ["a", "dup", "b"]) == [3, 1]
+
+
+def test_gap_raises():
+    cfg = get_smoke_config("smollm_360m")
+    placement = Placement({"a": LayerRange(0, 2), "b": LayerRange(3, 4)}, 4)
+    with pytest.raises(ValueError, match="gap"):
+        stage_units_from_placement(placement, cfg, ["a", "b"])
+
+
+def test_iwrr_proportional_within_one():
+    """Smooth IWRR: in every window of sum(weights) picks, each candidate is
+    chosen weight +/- 1 times (flow-proportional routing without bursts)."""
+    weights = {"a": 5.0, "b": 3.0, "c": 2.0}
+    it = IWRR(list(weights), list(weights.values()))
+    window = int(sum(weights.values()))
+    picks = [it.pick() for _ in range(100 * window)]
+    assert None not in picks
+    for i in range(0, len(picks), window):
+        counts = collections.Counter(picks[i:i + window])
+        for cand, w in weights.items():
+            assert abs(counts[cand] - w) <= 1, (i, counts)
