@@ -23,7 +23,8 @@ from repro.core import (COORDINATOR, MILPOptions, ModelProfile, plan)
 from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
 from repro.core.cluster import _full_mesh_links
 from repro.models import init
-from repro.serving import Engine, EngineConfig, Request
+from repro.serving import (Engine, EngineConfig, PagedEngine, Request,
+                           full_rectangle_pages, pages_for_vram)
 
 
 def make_cluster(devs=("A100", "L4", "T4")):
@@ -41,6 +42,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--dense", action="store_true",
+                    help="use the dense per-slot engine instead of paged KV")
     args = ap.parse_args()
 
     cfg = get_smoke_config("smollm_360m")
@@ -60,10 +63,26 @@ def main() -> None:
     # one Engine per node — in production each runs on its own slice; here
     # they share the host and serve the full model for requests routed to
     # them as first-stage (single-stage pipelines for this tiny model).
-    engines = {node: Engine(cfg, params,
-                            EngineConfig(max_batch=4, max_len=64,
-                                         prompt_len=16))
-               for node in p.placement.assignment}
+    ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
+    if args.dense:
+        engines = {node: Engine(cfg, params, ec)
+                   for node in p.placement.assignment}
+    else:
+        # paged KV: each node's pool is sized from *its* VRAM (capped at the
+        # full rectangle for this smoke model) — the memory heterogeneity
+        # Helix's placement exploits
+        page = 16
+        rect = full_rectangle_pages(cfg, max_batch=ec.max_batch,
+                                    max_len=ec.max_len, page_size=page)
+        engines = {}
+        for node, rng_ in sorted(p.placement.assignment.items()):
+            vram_pages = pages_for_vram(
+                cfg, cluster.nodes[node].vram_bytes, page_size=page,
+                layers_on_node=rng_.num_layers, max_pages=rect)
+            print(f"  {node}: pool {vram_pages} pages "
+                  f"({cluster.nodes[node].device.name})")
+            engines[node] = PagedEngine(cfg, params, ec,
+                                        num_pages=vram_pages, page_size=page)
 
     rng = np.random.RandomState(0)
     reqs = []

@@ -1,4 +1,9 @@
-"""Jit'd wrapper + page-pool utilities for paged attention decode."""
+"""Jit'd wrapper + page-pool utilities for paged attention decode.
+
+The serving-side allocator that feeds this kernel (on-demand pages, block
+tables, admission control) lives in ``repro.serving.kv_pool.PagePool``;
+``repro.models.paged`` is the model-level consumer (``gqa_decode_paged``).
+"""
 from __future__ import annotations
 
 import functools

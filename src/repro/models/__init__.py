@@ -1,4 +1,6 @@
 """Pure-JAX model zoo covering the 10 assigned architectures."""
 from .model import (decode_step, encode, forward, init, init_caches, loss_fn,
                     param_specs, prefill)
+from .paged import (all_blocks_paged, decode_step_paged, init_caches_paged,
+                    num_paged_layers, prefill_chunk_paged)
 from .common import abstract_shapes, init_params, logical_axes, ParamSpec

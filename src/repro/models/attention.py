@@ -245,6 +245,87 @@ def gqa_decode(cfg, params, x, cache, cache_pos, *, window=0, cross_kv=None):
     return out, {"k": k_cache, "v": v_cache, "pos": slot_pos}
 
 
+# ---------------------------------------------------------------------------
+# Paged GQA paths (decode via the Pallas paged_attention kernel)
+# ---------------------------------------------------------------------------
+
+def _gqa_qkv_rope(cfg, params, x, positions):
+    """Project q/k/v for a chunk and apply rope at absolute ``positions``.
+    x: (B,C,d); positions: (B,C) -> q (B,C,H,D), k/v (B,C,KH,D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["v"])
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(positions, cfg.resolved_head_dim,
+                               cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_decode_paged(cfg, params, x, k_pages, v_pages, block_table, cache_pos,
+                     *, interpret=False):
+    """Single-token decode against a shared page pool.
+
+    x: (B,1,d); k/v_pages: (P,page,KH,D) pool shared across layers;
+    block_table: (B,NP) page ids for this layer; cache_pos: (B,) absolute
+    position of the token being generated.  Writes the new K/V into the page
+    holding ``cache_pos`` and runs the Pallas paged_attention kernel over the
+    sequence's pages.  Returns (out, k_pages, v_pages).
+    """
+    from ..kernels.paged_attention import paged_attention_op
+
+    B = x.shape[0]
+    page = k_pages.shape[1]
+    q, k_new, v_new = _gqa_qkv_rope(cfg, params, x, cache_pos[:, None])
+    pid = jnp.take_along_axis(block_table, (cache_pos // page)[:, None],
+                              axis=1)[:, 0]
+    off = cache_pos % page
+    k_pages = k_pages.at[pid, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v_new[:, 0].astype(v_pages.dtype))
+    ctx = paged_attention_op(q[:, 0], k_pages, v_pages, block_table,
+                             cache_pos + 1, interpret=interpret)
+    out = jnp.einsum("bshk,hkd->bsd", ctx[:, None].astype(x.dtype),
+                     params["o"])
+    return out, k_pages, v_pages
+
+
+def gqa_prefill_paged(cfg, params, x, k_pages, v_pages, block_table,
+                      positions):
+    """Chunked paged prefill: write this chunk's K/V into the pool and attend
+    the chunk's queries causally over everything the sequence has written so
+    far (earlier chunks included — pure-JAX gather over the block table; the
+    Pallas kernel covers the decode side).
+
+    x: (B,C,d); positions: (B,C) absolute positions of the chunk tokens.
+    Returns (out (B,C,d), k_pages, v_pages).
+    """
+    B, C, d = x.shape
+    P, page, KH, D = k_pages.shape
+    NP = block_table.shape[1]
+    H = cfg.num_heads
+    G = H // KH
+    q, k_new, v_new = _gqa_qkv_rope(cfg, params, x, positions)
+    pid = jnp.take_along_axis(block_table, positions // page, axis=1)
+    off = positions % page
+    k_pages = k_pages.at[pid, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v_new.astype(v_pages.dtype))
+
+    k_all = k_pages[block_table].reshape(B, NP * page, KH, D)
+    v_all = v_pages[block_table].reshape(B, NP * page, KH, D)
+    qg = q.reshape(B, C, KH, G, D)
+    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_all,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    kpos = jnp.arange(NP * page)
+    mask = kpos[None, None, :] <= positions[:, :, None]        # (B,C,S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhgcs,bshd->bchgd", attn.astype(x.dtype), v_all)
+    ctx = ctx.reshape(B, C, H, D)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["o"])
+    return out, k_pages, v_pages
+
+
 def gqa_cache_init(cfg, batch: int, max_len: int, window: int, dtype):
     W = min(window, max_len) if window else max_len
     kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim

@@ -1,0 +1,259 @@
+"""Paged-KV model paths: prefill/decode over a unified page pool.
+
+The serving engine's page pool (``repro.serving.kv_pool.PagePool``) holds one
+physical K and V array shared by *all* of a node's local attention layers
+(the paper's §5.1 "pool of pages unified for all local layers").  This module
+is the model-side counterpart: it runs the layer stack with
+
+  * full-attention GQA blocks reading/writing the shared pool through their
+    per-layer block tables (decode goes through the Pallas paged_attention
+    kernel), and
+  * a dense fallback for everything else — MLA, SSM (mamba/xLSTM), windowed
+    attention and encoder-decoder blocks keep their existing per-slot caches.
+
+Paged layers are numbered prologue-first, then pattern positions in
+repeat-major order; block tables follow the same layout so the super-block
+``lax.scan`` can consume them as ``(repeats, paged_per_pattern, B, NP)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import BlockSpec, ModelConfig
+from .attention import gqa_decode_paged, gqa_prefill_paged
+from .common import apply_norm
+from .model import (_apply_block_decode, _cache_init_for_block, _embed,
+                    _logits)
+from .moe import ffn_apply, moe_apply
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers
+# ---------------------------------------------------------------------------
+
+def is_paged_block(cfg: ModelConfig, b: BlockSpec) -> bool:
+    """True if this block's KV lives in the page pool (full-attention GQA).
+    MLA / SSM / windowed / cross-attention blocks use the dense fallback."""
+    return (b.kind == "attn" and b.attn == "full"
+            and not cfg.mla_kv_lora_rank and not cfg.is_encoder_decoder)
+
+
+def paged_layer_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(paged prologue blocks, paged blocks per pattern repeat)."""
+    n_pro = sum(is_paged_block(cfg, b) for b in cfg.prologue)
+    n_pp = sum(is_paged_block(cfg, b) for b in cfg.pattern)
+    return n_pro, n_pp
+
+
+def num_paged_layers(cfg: ModelConfig) -> int:
+    n_pro, n_pp = paged_layer_counts(cfg)
+    return n_pro + n_pp * cfg.repeats
+
+
+def all_blocks_paged(cfg: ModelConfig) -> bool:
+    """True if the whole stack is paged — enables chunked prefill (no dense
+    caches at all); hybrid stacks prefill single-shot instead."""
+    return all(is_paged_block(cfg, b) for b in cfg.blocks)
+
+
+def init_caches_paged(cfg: ModelConfig, batch: int, max_len: int):
+    """Dense-fallback caches: same pytree shape as ``init_caches`` but paged
+    blocks hold an empty dict — their KV lives in the pool."""
+    dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    caches: Dict[str, Any] = {}
+    if cfg.prologue:
+        caches["prologue"] = [
+            {} if is_paged_block(cfg, b)
+            else _cache_init_for_block(cfg, b, batch, max_len, dtype)
+            for b in cfg.prologue]
+    per_pos = {f"pos{i}": ({} if is_paged_block(cfg, b)
+                           else _cache_init_for_block(cfg, b, batch, max_len,
+                                                      dtype))
+               for i, b in enumerate(cfg.pattern)}
+    caches["super"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), per_pos)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _mlp(cfg, p, h):
+    if "moe" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        out, _ = moe_apply(cfg, p["moe"], hn)
+        return h + out
+    if "ffn" in p:
+        hn = apply_norm(cfg, p["norm2"], h)
+        return h + ffn_apply(p["ffn"], hn)
+    return h
+
+
+def _block_decode_paged(cfg, p, h, kp, vp, table, cache_pos, interpret):
+    hn = apply_norm(cfg, p["norm1"], h)
+    out, kp, vp = gqa_decode_paged(cfg, p["mix"], hn, kp, vp, table,
+                                   cache_pos, interpret=interpret)
+    return _mlp(cfg, p, h + out), kp, vp
+
+
+def _block_prefill_paged(cfg, p, h, kp, vp, table, positions):
+    hn = apply_norm(cfg, p["norm1"], h)
+    out, kp, vp = gqa_prefill_paged(cfg, p["mix"], hn, kp, vp, table,
+                                    positions)
+    return _mlp(cfg, p, h + out), kp, vp
+
+
+# ---------------------------------------------------------------------------
+# Model-level paged decode / chunked prefill
+# ---------------------------------------------------------------------------
+
+def decode_step_paged(cfg: ModelConfig, params, tokens, caches, cache_pos,
+                      k_pages, v_pages, tables_pro, tables_super, *,
+                      interpret: bool = False):
+    """One autoregressive step over the paged pool.
+
+    tokens/cache_pos: (B,); k/v_pages: (P,page,KH,D); tables_pro:
+    (n_paged_prologue, B, NP); tables_super: (repeats, n_paged_pattern, B, NP).
+    Returns (logits (B,V), new dense-fallback caches, k_pages, v_pages).
+    """
+    positions = cache_pos[:, None]
+    h = _embed(cfg, params, tokens[:, None], positions)
+
+    new_caches: Dict[str, Any] = {}
+    li = 0
+    if cfg.prologue:
+        new_caches["prologue"] = []
+        for i, b in enumerate(cfg.prologue):
+            if is_paged_block(cfg, b):
+                h, k_pages, v_pages = _block_decode_paged(
+                    cfg, params["prologue"][i], h, k_pages, v_pages,
+                    tables_pro[li], cache_pos, interpret)
+                new_caches["prologue"].append({})
+                li += 1
+            else:
+                h, nc = _apply_block_decode(cfg, b, params["prologue"][i], h,
+                                            caches["prologue"][i], cache_pos,
+                                            None)
+                new_caches["prologue"].append(nc)
+
+    def superblock(carry, xs):
+        h, kp, vp = carry
+        layer_params, layer_cache, layer_tables = xs
+        new_layer_cache = {}
+        ti = 0
+        for i, b in enumerate(cfg.pattern):
+            if is_paged_block(cfg, b):
+                h, kp, vp = _block_decode_paged(
+                    cfg, layer_params[f"pos{i}"], h, kp, vp,
+                    layer_tables[ti], cache_pos, interpret)
+                new_layer_cache[f"pos{i}"] = {}
+                ti += 1
+            else:
+                h, nc = _apply_block_decode(cfg, b, layer_params[f"pos{i}"],
+                                            h, layer_cache[f"pos{i}"],
+                                            cache_pos, None)
+                new_layer_cache[f"pos{i}"] = nc
+        return (h, kp, vp), new_layer_cache
+
+    (h, k_pages, v_pages), new_super = jax.lax.scan(
+        superblock, (h, k_pages, v_pages),
+        (params["super"], caches["super"], tables_super))
+    new_caches["super"] = new_super
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h)[:, 0]
+    return logits, new_caches, k_pages, v_pages
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, tokens, start_pos,
+                        k_pages, v_pages, tables_pro, tables_super):
+    """Prefill one prompt chunk, appending its K/V to the pool.
+
+    Only valid when ``all_blocks_paged(cfg)`` — every layer's history lives
+    in the pool, so chunk N attends over chunks 0..N via the block tables and
+    no dense caches are needed.  tokens: (B,C); start_pos: (B,) absolute
+    position of tokens[:, 0].  Returns (last-token logits, k_pages, v_pages).
+    """
+    B, C = tokens.shape
+    positions = start_pos[:, None] + jnp.arange(C)[None, :]
+    h = _embed(cfg, params, tokens, positions)
+
+    li = 0
+    for i, b in enumerate(cfg.prologue):
+        h, k_pages, v_pages = _block_prefill_paged(
+            cfg, params["prologue"][i], h, k_pages, v_pages, tables_pro[li],
+            positions)
+        li += 1
+
+    def superblock(carry, xs):
+        h, kp, vp = carry
+        layer_params, layer_tables = xs
+        for i in range(len(cfg.pattern)):
+            h, kp, vp = _block_prefill_paged(
+                cfg, layer_params[f"pos{i}"], h, kp, vp, layer_tables[i],
+                positions)
+        return (h, kp, vp), None
+
+    (h, k_pages, v_pages), _ = jax.lax.scan(
+        superblock, (h, k_pages, v_pages), (params["super"], tables_super))
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _logits(cfg, params, h[:, -1:])[:, 0]
+    return logits, k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
+# Dense-prefill absorption (hybrid stacks)
+# ---------------------------------------------------------------------------
+
+def absorb_dense_prefill(cfg: ModelConfig, caches, k_pages, v_pages,
+                         table, slot: int, seq_len: int, page: int):
+    """Move a single-request dense prefill's GQA K/V into the page pool.
+
+    Hybrid stacks (MLA/SSM/windowed blocks present) prefill single-shot with
+    the dense ``prefill`` — correct at any prompt length — then scatter the
+    full-attention layers' K/V into this slot's pages and drop those leaves
+    (replaced by ``{}``), keeping only the fallback caches dense.
+
+    caches: prefill output with batch 1; table: host (L, max_batch, NP) int32
+    page-id array.  Returns (caches', k_pages, v_pages).
+    """
+    import numpy as np
+
+    n_pro, n_pp = paged_layer_counts(cfg)
+    pos = np.arange(seq_len)
+    blk, off = pos // page, jnp.asarray(pos % page)
+
+    def scatter(layer_idx, k, v):
+        nonlocal k_pages, v_pages
+        pids = jnp.asarray(table[layer_idx, slot, blk])
+        k_pages = k_pages.at[pids, off].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[pids, off].set(v.astype(v_pages.dtype))
+
+    out: Dict[str, Any] = {}
+    if cfg.prologue:
+        out["prologue"] = []
+        li = 0
+        for i, b in enumerate(cfg.prologue):
+            c = caches["prologue"][i]
+            if is_paged_block(cfg, b):
+                scatter(li, c["k"][0, :seq_len], c["v"][0, :seq_len])
+                out["prologue"].append({})
+                li += 1
+            else:
+                out["prologue"].append(c)
+    out["super"] = {}
+    ti = 0
+    for i, b in enumerate(cfg.pattern):
+        c = caches["super"][f"pos{i}"]
+        if is_paged_block(cfg, b):
+            for r in range(cfg.repeats):
+                scatter(n_pro + r * n_pp + ti,
+                        c["k"][r, 0, :seq_len], c["v"][r, 0, :seq_len])
+            out["super"][f"pos{i}"] = {}
+            ti += 1
+        else:
+            out["super"][f"pos{i}"] = c
+    return out, k_pages, v_pages

@@ -1,3 +1,5 @@
-"""Serving engine: continuous batching over (partial) layer stacks."""
-from .engine import Engine, EngineConfig, Request
+"""Serving engines: continuous batching over (partial) layer stacks."""
+from .engine import Engine, EngineConfig, PagedEngine, Request
+from .kv_pool import (PagePool, PoolExhausted, full_rectangle_pages,
+                      pages_for_vram)
 from .sampling import sample_token

@@ -2,13 +2,22 @@
 
 This is the JAX analogue of the paper's per-node vLLM worker: each Helix
 compute node runs an Engine over the *contiguous layer range* the MILP
-assigned to it, with iteration-level (continuous) batching and a shared KV
-pool across its local layers (§5.1 "a pool of pages unified for all local
-layers").
+assigned to it, with iteration-level (continuous) batching.
 
-The Engine here executes the whole model when given the full range (used by
-the quickstart/serving examples), or a partial stack when given a Helix
-stage (exercised in tests via ``layer_slice``).
+Two engines share the Request/EngineConfig API:
+
+  * ``Engine`` — dense per-slot caches sized (max_batch, max_len).  Simple,
+    but memory is reserved rectangle-wise and prompts must fit the
+    ``prompt_len`` bucket.
+  * ``PagedEngine`` — KV lives in a ``kv_pool.PagePool`` shared across the
+    node's local layers (§5.1 "a pool of pages unified for all local
+    layers").  Prompts of any length prefill in ``prompt_len``-sized chunks
+    that append pages; decode runs the Pallas paged_attention kernel for GQA
+    layers with a dense fallback for MLA/SSM blocks; admission blocks (and
+    decode preempts the newest request) when the pool is exhausted.
+
+Both engines execute the whole model when given the full range (used by the
+quickstart/serving examples), or a partial stack when given a Helix stage.
 """
 from __future__ import annotations
 
@@ -23,6 +32,11 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.model import decode_step, init_caches, prefill
+from ..models.paged import (absorb_dense_prefill, all_blocks_paged,
+                            decode_step_paged, init_caches_paged,
+                            num_paged_layers, paged_layer_counts,
+                            prefill_chunk_paged)
+from .kv_pool import PagePool
 from .sampling import sample_token
 
 
@@ -34,26 +48,23 @@ class Request:
     temperature: float = 0.0
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None   # "stop" | "length" when done
     submitted_s: float = 0.0
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 8
-    max_len: int = 512
-    prompt_len: int = 128                 # static prompt bucket (left-pad)
+    max_len: int = 512                    # per-request token budget
+    prompt_len: int = 128                 # prompt bucket (dense) / chunk (paged)
     eos_token: int = -1                   # -1 = never stop early
 
 
-class Engine:
-    """Continuous-batching engine with fixed decode slots.
-
-    Slots hold at most ``max_batch`` concurrent requests; prompts are
-    left-padded into a static bucket so prefill compiles once; decode runs
-    one jitted step for all active slots per iteration.
-    """
+class _EngineBase:
+    """Shared slot bookkeeping + sampling/termination logic."""
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  rng_seed: int = 0):
@@ -62,11 +73,92 @@ class Engine:
         self.ec = engine_cfg
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_batch
-        self.caches = init_caches(cfg, engine_cfg.max_batch, engine_cfg.max_len)
-        self.positions = jnp.zeros((engine_cfg.max_batch,), jnp.int32)
-        self.tokens = jnp.zeros((engine_cfg.max_batch,), jnp.int32)
+        self.positions = np.zeros((engine_cfg.max_batch,), np.int32)
+        self.tokens = np.zeros((engine_cfg.max_batch,), np.int32)
         self.active = np.zeros((engine_cfg.max_batch,), bool)
         self._rng = np.random.RandomState(rng_seed)
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        self._validate(req)
+        req.submitted_s = time.time()
+        self.queue.append(req)
+
+    def _validate(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def _finish(self, slot: int, req: Request, reason: str) -> None:
+        req.done = True
+        req.finish_reason = reason
+        req.finished_s = time.time()
+        self.slots[slot] = None
+        self.active[slot] = False
+
+    def _first_token_done(self, req: Request, nxt: int, pos: int
+                          ) -> Optional[str]:
+        """Done-ness of a request whose only token so far came from prefill
+        — checked *before* seating it, so a max_new_tokens=1 request never
+        occupies a decode slot or burns a decode step."""
+        if int(nxt) == self.ec.eos_token:
+            return "stop"
+        if req.max_new_tokens <= 1:
+            return "length"
+        if pos >= self.ec.max_len:
+            return "length"          # prompt already filled the budget
+        return None
+
+    def _sample_slots(self, logits: np.ndarray) -> int:
+        """Sample one token for every seated request, advance positions, and
+        retire requests that hit eos / max_new_tokens / the length budget."""
+        produced = 0
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            nxt = sample_token(logits[slot], req.temperature, self._rng)
+            req.output.append(int(nxt))
+            produced += 1
+            self.positions[slot] += 1
+            reason = None
+            if int(nxt) == self.ec.eos_token:
+                reason = "stop"
+            elif len(req.output) >= req.max_new_tokens:
+                reason = "length"
+            elif self.positions[slot] >= self.ec.max_len:
+                # cache/pool budget reached: hard termination, never write
+                # past the end (the dense path previously grew ``positions``
+                # unbounded and decode_step wrote out of range)
+                reason = "length"
+            if reason is not None:
+                self._retire(slot, req, reason)
+            else:
+                self.tokens[slot] = int(nxt)
+        return produced
+
+    def _retire(self, slot: int, req: Request, reason: str) -> None:
+        self._finish(slot, req, reason)
+
+    def run_until_done(self, max_iters: int = 10000) -> None:
+        for _ in range(max_iters):
+            if not self.queue and not self.active.any():
+                return
+            self.step()
+
+
+class Engine(_EngineBase):
+    """Continuous-batching engine with fixed dense decode slots.
+
+    Slots hold at most ``max_batch`` concurrent requests; prompts must fit
+    the ``prompt_len`` bucket (longer prompts raise — use PagedEngine, which
+    chunks); decode runs one jitted step for all active slots per iteration
+    and each request terminates at the ``max_len`` cache budget.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 rng_seed: int = 0):
+        super().__init__(cfg, params, engine_cfg, rng_seed)
+        self.caches = init_caches(cfg, engine_cfg.max_batch,
+                                  engine_cfg.max_len)
         self._decode = jax.jit(
             lambda params, tok, caches, pos: decode_step(cfg, params, tok,
                                                          caches, pos))
@@ -74,37 +166,42 @@ class Engine:
             lambda params, tok: prefill(cfg, params, tok,
                                         max_len=engine_cfg.max_len))
 
-    # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        req.submitted_s = time.time()
-        self.queue.append(req)
+    def _validate(self, req: Request) -> None:
+        if len(req.prompt) > self.ec.prompt_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the dense "
+                f"engine's prompt_len bucket ({self.ec.prompt_len}); "
+                "refusing to truncate — use PagedEngine (chunked prefill)")
+        if len(req.prompt) > self.ec.max_len:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens exceeds "
+                             f"max_len {self.ec.max_len}")
 
+    # ------------------------------------------------------------------
     def _admit(self) -> None:
         for slot in range(self.ec.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            # prefill this request alone (bucketed), then splice its caches
-            # into the slot.  (A production engine would batch prefills;
-            # chunked prefill is an optional follow-up.)
-            prompt = req.prompt[-self.ec.prompt_len:]
-            tok = jnp.asarray(prompt, jnp.int32)[None, :]
+            # prefill this request alone, then splice its caches into the
+            # slot.  (A production engine would batch prefills.)
+            prompt = np.asarray(req.prompt, np.int32)
+            tok = jnp.asarray(prompt)[None, :]
             logits, caches1 = self._prefill_one(self.params, tok)
             nxt = sample_token(np.asarray(logits)[0], req.temperature,
                                self._rng)
             req.output.append(int(nxt))
             req.first_token_s = time.time()
+            reason = self._first_token_done(req, nxt, len(prompt))
+            if reason is not None:
+                self._finish(slot, req, reason)
+                continue
             self.caches = jax.tree.map(
                 lambda full, one: _splice_slot(full, one, slot),
                 self.caches, caches1)
-            self.positions = self.positions.at[slot].set(len(prompt))
-            self.tokens = self.tokens.at[slot].set(int(nxt))
+            self.positions[slot] = len(prompt)
+            self.tokens[slot] = int(nxt)
             self.active[slot] = True
             self.slots[slot] = req
-
-    @staticmethod
-    def _batch_axis(x):
-        return 0
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -113,37 +210,213 @@ class Engine:
         self._admit()
         if not self.active.any():
             return 0
-        logits, self.caches = self._decode(self.params, self.tokens,
-                                           self.caches, self.positions)
-        logits = np.asarray(logits)
-        produced = 0
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            nxt = sample_token(logits[slot], req.temperature, self._rng)
-            req.output.append(int(nxt))
-            produced += 1
-            done = (len(req.output) >= req.max_new_tokens
-                    or int(nxt) == self.ec.eos_token)
-            if done:
-                req.done = True
-                req.finished_s = time.time()
-                self.slots[slot] = None
-                self.active[slot] = False
-        self.positions = self.positions + jnp.asarray(
-            self.active.astype(np.int32))
-        new_tokens = np.array(self.tokens)  # writable copy
-        for slot, req in enumerate(self.slots):
-            if req is not None:
-                new_tokens[slot] = req.output[-1]
-        self.tokens = jnp.asarray(new_tokens)
-        return produced
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(self.tokens),
+                                           self.caches,
+                                           jnp.asarray(self.positions))
+        return self._sample_slots(np.asarray(logits))
 
-    def run_until_done(self, max_iters: int = 10000) -> None:
-        for _ in range(max_iters):
-            if not self.queue and not self.active.any():
+
+class PagedEngine(_EngineBase):
+    """Continuous-batching engine over a unified KV page pool.
+
+    Differences from the dense ``Engine``:
+      * prompts of any length are accepted — all-paged stacks prefill in
+        ``prompt_len``-sized chunks that append pages on demand; hybrid
+        stacks (MLA/SSM/windowed blocks) prefill single-shot and scatter
+        their GQA K/V into pages, keeping dense caches only for the
+        fallback blocks;
+      * decode runs ``paged_attention`` (Pallas) over the block tables;
+      * capacity is the *pool*, not max_batch x max_len: admission blocks
+        while the pool is full, and decode-time growth preempts the newest
+        request (recompute-on-readmit) rather than overflowing;
+      * a request hard-terminates when it reaches the ``max_len`` budget.
+
+    ``interpret`` defaults to True off-TPU so the kernel runs under the
+    Pallas interpreter on CPU.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 *, num_pages: Optional[int] = None, page_size: int = 16,
+                 interpret: Optional[bool] = None, rng_seed: int = 0):
+        super().__init__(cfg, params, engine_cfg, rng_seed)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        ec = engine_cfg
+        if num_pages is None:
+            # full static allocation (one rectangle); pass a smaller pool to
+            # oversubscribe and exercise admission control / preemption
+            from .kv_pool import full_rectangle_pages
+            num_pages = full_rectangle_pages(cfg, max_batch=ec.max_batch,
+                                             max_len=ec.max_len,
+                                             page_size=page_size)
+        self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
+                             max_batch=ec.max_batch, max_seq_len=ec.max_len)
+        self.caches = init_caches_paged(cfg, ec.max_batch, ec.max_len)
+        self._all_paged = all_blocks_paged(cfg)
+        self._n_pro, self._n_pp = paged_layer_counts(cfg)
+        self._order = np.full((ec.max_batch,), -1, np.int64)
+        self._admit_seq = 0
+
+        # donate the pool buffers so decode updates them in place — without
+        # this a VRAM-sized pool needs 2x its bytes at every step (donation
+        # is a no-op on CPU and would only warn there)
+        on_cpu = jax.default_backend() == "cpu"
+        self._decode = jax.jit(
+            lambda params, tok, caches, pos, kp, vp, tp, ts:
+            decode_step_paged(cfg, params, tok, caches, pos, kp, vp, tp, ts,
+                              interpret=interpret),
+            donate_argnums=() if on_cpu else (4, 5))
+        if self._all_paged:
+            self._prefill_chunk = jax.jit(
+                lambda params, tok, start, kp, vp, tp, ts:
+                prefill_chunk_paged(cfg, params, tok, start, kp, vp, tp, ts),
+                donate_argnums=() if on_cpu else (3, 4))
+        else:
+            self._prefill_one = jax.jit(
+                lambda params, tok: prefill(cfg, params, tok,
+                                            max_len=ec.max_len))
+
+    def _validate(self, req: Request) -> None:
+        if len(req.prompt) > self.ec.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the pool's "
+                f"per-request length budget ({self.ec.max_len}); refusing "
+                "to truncate")
+
+    # ------------------------------------------------------------------
+    def _tables(self, slot: Optional[int] = None) -> Tuple[jax.Array,
+                                                           jax.Array]:
+        """Block tables as (prologue, super) device arrays; ``slot`` narrows
+        to a single batch column (per-request prefill)."""
+        t = self.pool.table if slot is None \
+            else self.pool.table[:, slot:slot + 1]
+        B = t.shape[1]
+        tp = jnp.asarray(t[:self._n_pro])
+        ts = jnp.asarray(t[self._n_pro:].reshape(
+            self.cfg.repeats, self._n_pp, B, self.pool.blocks_per_seq))
+        return tp, ts
+
+    def _prefill(self, req: Request, slot: int) -> np.ndarray:
+        """Prefill one request into its pages; returns last-token logits.
+        A preempted request re-prefills prompt + already-generated tokens
+        (recompute) so its output continues where it left off."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if len(req.output) > 1:
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.output[:-1], np.int32)])
+        S = len(prompt)
+        if self._all_paged:
+            # chunked prefill: no truncation at any length, pages appended
+            # ahead of admission (ensure() already allocated them)
+            chunk = max(1, self.ec.prompt_len)
+            for off in range(0, S, chunk):
+                tok = jnp.asarray(prompt[off:off + chunk])[None, :]
+                tp, ts = self._tables(slot)
+                logits, self.pool.k, self.pool.v = self._prefill_chunk(
+                    self.params, tok, jnp.asarray([off], jnp.int32),
+                    self.pool.k, self.pool.v, tp, ts)
+            return np.asarray(logits)[0]
+        # hybrid stack: single-shot dense prefill (correct at any prompt
+        # length), then move GQA K/V into pages and splice the dense
+        # fallback caches (MLA/SSM/...) into this slot
+        tok = jnp.asarray(prompt)[None, :]
+        logits, caches1 = self._prefill_one(self.params, tok)
+        caches1, self.pool.k, self.pool.v = absorb_dense_prefill(
+            self.cfg, caches1, self.pool.k, self.pool.v, self.pool.table,
+            slot, S, self.pool.page)
+        self.caches = jax.tree.map(
+            lambda full, one: _splice_slot(full, one, slot),
+            self.caches, caches1)
+        return np.asarray(logits)[0]
+
+    def _admit(self) -> None:
+        for slot in range(self.ec.max_batch):
+            if not self.queue:
                 return
-            self.step()
+            if self.slots[slot] is not None:
+                continue
+            req = self.queue[0]
+            resumed = bool(req.output)      # preempted: recompute, not resample
+            S = len(req.prompt) + max(0, len(req.output) - 1)
+            # admission control: all prompt pages (plus the first decode
+            # token's) must be allocatable now, else the request waits
+            if not self.pool.ensure(slot, min(S + 1, self.ec.max_len)):
+                return
+            self.queue.popleft()
+            logits = self._prefill(req, slot)
+            if resumed:
+                nxt = req.output[-1]        # already sampled before eviction
+            else:
+                nxt = sample_token(logits, req.temperature, self._rng)
+                req.output.append(int(nxt))
+                req.first_token_s = time.time()
+                reason = self._first_token_done(req, nxt, S)
+                if reason is not None:
+                    self.pool.release(slot)
+                    self._finish(slot, req, reason)
+                    continue
+            self.positions[slot] = S
+            self.tokens[slot] = int(nxt)
+            self.active[slot] = True
+            self.slots[slot] = req
+            self._order[slot] = self._admit_seq
+            self._admit_seq += 1
+
+    # ------------------------------------------------------------------
+    def _preempt(self, slot: int) -> None:
+        """Evict a running request: free its pages and requeue it at the
+        front.  Generated tokens are kept — readmission re-prefills
+        prompt + output (vLLM-style recompute), so the visible output never
+        retracts and temperature>0 requests aren't resampled."""
+        req = self.slots[slot]
+        self.pool.release(slot)
+        req.preemptions += 1
+        self.queue.appendleft(req)
+        self.slots[slot] = None
+        self.active[slot] = False
+        self.positions[slot] = 0
+        self.tokens[slot] = 0
+        self._order[slot] = -1
+
+    def _grow_or_preempt(self) -> None:
+        """Allocate the pages each active slot needs for this decode step;
+        when the pool runs dry, preempt the newest request (least completed
+        work) until it fits — including the requester itself if it *is* the
+        newest."""
+        order = sorted((s for s in range(self.ec.max_batch)
+                        if self.active[s]), key=lambda s: self._order[s])
+        for slot in order:
+            if not self.active[slot]:
+                continue          # already preempted this round
+            while not self.pool.ensure(slot, int(self.positions[slot]) + 1):
+                live = [s for s in range(self.ec.max_batch)
+                        if self.active[s]]
+                victim = max(live, key=lambda s: self._order[s])
+                self._preempt(victim)
+                if victim == slot:
+                    break
+
+    def step(self) -> int:
+        """One engine iteration: admit + grow/preempt + one paged decode
+        step for active slots.  Returns number of tokens produced."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        self._grow_or_preempt()
+        if not self.active.any():
+            return 0
+        tp, ts = self._tables()
+        logits, self.caches, self.pool.k, self.pool.v = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches,
+            jnp.asarray(self.positions), self.pool.k, self.pool.v, tp, ts)
+        return self._sample_slots(np.asarray(logits))
+
+    def _retire(self, slot: int, req: Request, reason: str) -> None:
+        self.pool.release(slot)
+        self._order[slot] = -1
+        self._finish(slot, req, reason)
 
 
 def _splice_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:

@@ -1,0 +1,154 @@
+"""Unified paged KV pool for the serving engine (paper §5.1).
+
+One physical pool of ``num_pages`` K and V pages is shared by **all** of a
+node's paged attention layers — the paper's "pool of pages unified for all
+local layers".  A token occupies one row in one page *per paged layer*, so a
+logical sequence block costs ``num_paged_layers`` physical pages.  Page 0 is
+a scratch page: empty block-table entries point at it, so inactive batch
+slots write/read it harmlessly inside the jitted decode step.
+
+Pool-sizing math (see ``pages_for_vram``):
+
+    | quantity              | formula                                       |
+    |-----------------------|-----------------------------------------------|
+    | page_bytes            | 2 (K+V) * page_size * kv_heads * head_dim * b |
+    | param_bytes (node)    | param_count * b * layers_on_node / num_layers |
+    | pool bytes available  | vram_bytes - param_bytes                      |
+    | num_pages             | pool_bytes // page_bytes                      |
+    | token capacity        | (num_pages - 1) * page_size / n_paged_layers  |
+    | per-seq budget (NP)   | ceil(max_seq_len / page_size) blocks          |
+    | min viable pool       | 1 + NP * n_paged_layers pages                 |
+
+where ``b`` is bytes per element (2 for bfloat16).  Unlike the dense engine's
+``max_batch * max_len`` rectangle, capacity is shared: many short sequences
+or a few long ones fit the same pool, which is exactly the asymmetric-memory
+slack Helix's placement exploits on heterogeneous nodes.
+
+Allocation is on-demand (a block per ``page_size`` tokens, across layers),
+freed on request completion/preemption; admission control blocks new
+requests — and decode preempts the newest running request — when the pool is
+exhausted, instead of overflowing.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.paged import num_paged_layers
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when a request needs more pages than the pool can ever hold."""
+
+
+class PagePool:
+    """Shared K/V page pool + per-slot block tables and a free list.
+
+    Device arrays ``k``/``v`` have shape (num_pages, page_size, kv_heads,
+    head_dim) and are updated functionally by the jitted model steps (the
+    engine stores the returned arrays back).  The block table is a host
+    ``(num_paged_layers, max_batch, blocks_per_seq)`` int32 array; row order
+    is prologue layers first, then pattern positions repeat-major, matching
+    ``models.paged`` layer numbering.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
+                 max_batch: int, max_seq_len: int, dtype=None):
+        self.cfg = cfg
+        self.page = page_size
+        self.num_layers = num_paged_layers(cfg)
+        if self.num_layers == 0:
+            raise ValueError(f"{cfg.name}: no full-attention GQA blocks — "
+                             "nothing to page; use the dense engine")
+        self.blocks_per_seq = -(-max_seq_len // page_size)
+        min_pages = 1 + self.blocks_per_seq * self.num_layers
+        if num_pages < min_pages:
+            raise ValueError(
+                f"pool of {num_pages} pages cannot hold one full request: "
+                f"need >= {min_pages} (1 scratch + {self.blocks_per_seq} "
+                f"blocks x {self.num_layers} layers)")
+        if dtype is None:
+            dtype = {"bfloat16": jnp.bfloat16,
+                     "float32": jnp.float32}[cfg.param_dtype]
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self.num_pages = num_pages
+        self.k = jnp.zeros((num_pages, page_size, kh, hd), dtype)
+        self.v = jnp.zeros((num_pages, page_size, kh, hd), dtype)
+        # page 0 reserved as scratch; free list is a stack of page ids
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.table = np.zeros((self.num_layers, max_batch,
+                               self.blocks_per_seq), np.int32)
+        self._nblocks = np.zeros((max_batch,), np.int64)
+
+    # ------------------------------------------------------------------
+    @property
+    def used(self) -> int:
+        """Pages currently allocated (scratch page excluded)."""
+        return (self.num_pages - 1) - len(self._free)
+
+    def capacity_tokens(self, slot: int) -> int:
+        return int(self._nblocks[slot]) * self.page
+
+    def pages_needed(self, slot: int, tokens: int) -> int:
+        blocks = -(-tokens // self.page) - int(self._nblocks[slot])
+        return max(0, blocks) * self.num_layers
+
+    def can_fit(self, slot: int, tokens: int) -> bool:
+        return self.pages_needed(slot, tokens) <= len(self._free)
+
+    def ensure(self, slot: int, tokens: int) -> bool:
+        """Grow ``slot``'s allocation to hold ``tokens``.  Returns False if
+        the pool is currently exhausted (caller blocks or preempts); raises
+        PoolExhausted if ``tokens`` exceeds the per-sequence budget."""
+        target = -(-tokens // self.page)
+        if target > self.blocks_per_seq:
+            raise PoolExhausted(
+                f"{tokens} tokens > per-sequence budget "
+                f"{self.blocks_per_seq * self.page}")
+        if not self.can_fit(slot, tokens):
+            return False
+        while self._nblocks[slot] < target:
+            j = int(self._nblocks[slot])
+            for li in range(self.num_layers):
+                self.table[li, slot, j] = self._free.pop()
+            self._nblocks[slot] += 1
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return all of ``slot``'s pages to the free list."""
+        for j in range(int(self._nblocks[slot])):
+            for li in range(self.num_layers):
+                self._free.append(int(self.table[li, slot, j]))
+        self.table[:, slot, :] = 0
+        self._nblocks[slot] = 0
+
+
+def full_rectangle_pages(cfg: ModelConfig, *, max_batch: int, max_len: int,
+                         page_size: int) -> int:
+    """Pages for a dense-equivalent full allocation — every slot holding its
+    whole ``max_len`` budget — plus the scratch page.  Pools this size can
+    never block or preempt; smaller pools oversubscribe."""
+    blocks = -(-max_len // page_size)
+    return 1 + blocks * num_paged_layers(cfg) * max_batch
+
+
+def pages_for_vram(cfg: ModelConfig, vram_bytes: float, *, page_size: int,
+                   layers_on_node: Optional[int] = None,
+                   max_pages: Optional[int] = None) -> int:
+    """Size a pool from node VRAM the way ``sim.Simulator`` sizes its KV
+    capacity: whatever VRAM the node's parameter slice does not use becomes
+    pages.  ``layers_on_node`` is the Helix layer-slice size (defaults to the
+    whole model); ``max_pages`` caps the result (useful for smoke models
+    whose tiny pages would otherwise number in the millions)."""
+    elt = {"bfloat16": 2, "float32": 4}[cfg.param_dtype]
+    page_bytes = 2 * page_size * cfg.num_kv_heads * cfg.resolved_head_dim * elt
+    layers = layers_on_node if layers_on_node is not None else cfg.num_layers
+    param_bytes = cfg.param_count() * elt * layers / max(cfg.num_layers, 1)
+    free = max(0.0, vram_bytes - param_bytes)
+    pages = int(free // page_bytes)
+    if max_pages is not None:
+        pages = min(pages, max_pages)
+    return pages

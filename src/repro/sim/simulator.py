@@ -134,8 +134,13 @@ class _ReqState:
     stage_idx: int = 0
     decoded: int = 0                 # output tokens completed
     first_token_s: Optional[float] = None
-    kv_reserved_nodes: Tuple[str, ...] = ()
     restarted: int = 0
+    # the scheduler that reserved this request's pipeline — reservations
+    # must be released on the same estimator even after a replan swap
+    scheduler: Optional[BaseScheduler] = None
+    # exact KV charged per node so far — released verbatim on completion or
+    # restart, so accounting can never drift from the charges
+    kv_charged: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class Simulator:
@@ -199,16 +204,33 @@ class Simulator:
         self._push(link.busy_until + link.latency, deliver)
 
     # -- node batch server ----------------------------------------------------
+    def _charge_kv(self, ns: NodeSim, state: "_ReqState",
+                   amount: float) -> None:
+        if amount > 0:
+            ns.kv_used += amount
+            state.kv_charged[ns.name] = \
+                state.kv_charged.get(ns.name, 0.0) + amount
+
+    def _release_kv(self, state: "_ReqState") -> None:
+        """Return every byte-token this request charged, exactly."""
+        for node, amt in state.kv_charged.items():
+            ns = self.nodes.get(node)
+            if ns is not None:
+                ns.kv_used = max(0.0, ns.kv_used - amt)
+        state.kv_charged.clear()
+
     def _enqueue_work(self, node: str, work_units: float, kv_need: float,
-                      kv_grow: float, done: Callable) -> None:
+                      kv_grow: float, done: Callable,
+                      state: "_ReqState") -> None:
         ns = self.nodes[node]
         if not ns.alive:
-            return  # dropped; failure handler restarts the request
-        if kv_need > 0 and ns.kv_used + kv_need > ns.kv_capacity:
-            ns.kv_wait.append((work_units, kv_need, kv_grow, done))
+            self._restart(state)
             return
-        ns.kv_used += kv_need + kv_grow
-        ns.pending.append((work_units, done))
+        if kv_need > 0 and ns.kv_used + kv_need > ns.kv_capacity:
+            ns.kv_wait.append((work_units, kv_need, kv_grow, done, state))
+            return
+        self._charge_kv(ns, state, kv_need + kv_grow)
+        ns.pending.append((work_units, done, state))
         self._kick(node)
 
     def _kick(self, node: str) -> None:
@@ -217,8 +239,8 @@ class Simulator:
             return
         batch, tokens = [], 0.0
         while ns.pending and tokens < ns.batch_token_cap:
-            w, cb = ns.pending.popleft()
-            batch.append(cb)
+            w, cb, st = ns.pending.popleft()
+            batch.append((cb, st))
             tokens += w
         dur = tokens / ns.effective_rate() + ns.batch_overhead_s
         ns.busy_until = self._now + dur
@@ -226,35 +248,39 @@ class Simulator:
             self.metrics.node_busy_s[node] += dur
         self._push(ns.busy_until, self._batch_done, node, batch)
 
-    def _batch_done(self, node: str, batch: List[Callable]) -> None:
+    def _batch_done(self, node: str, batch: List[Tuple]) -> None:
         ns = self.nodes[node]
         if not ns.alive:
+            # node died while this batch was in flight: the work is lost,
+            # restart the requests instead of stranding their reservations
+            for _, st in batch:
+                self._restart(st)
             return
-        for cb in batch:
+        for cb, _ in batch:
             cb()
         # admit kv-waiters whose reservation now fits
         moved = True
         while moved and ns.kv_wait:
             moved = False
-            w, need, grow, cb = ns.kv_wait[0]
+            w, need, grow, cb, st = ns.kv_wait[0]
             if ns.kv_used + need <= ns.kv_capacity:
                 ns.kv_wait.popleft()
-                ns.kv_used += need + grow
-                ns.pending.append((w, cb))
+                self._charge_kv(ns, st, need + grow)
+                ns.pending.append((w, cb, st))
                 moved = True
         self._kick(node)
 
     # -- request lifecycle ----------------------------------------------------
-    def _arrive(self, req: TraceRequest) -> None:
+    def _arrive(self, req: TraceRequest, restarted: int = 0) -> None:
         try:
             pipeline = self.scheduler.schedule(
                 prompt_tokens=req.input_tokens + self.kv_output_estimate)
         except RuntimeError:
             # no route available (e.g. mid-replan): retry shortly
-            self._push(self._now + 0.5, self._arrive, req)
+            self._push(self._now + 0.5, self._arrive, req, restarted)
             return
         state = _ReqState(trace=req, pipeline=pipeline, arrival_s=self._now,
-                          kv_reserved_nodes=pipeline.nodes)
+                          restarted=restarted, scheduler=self.scheduler)
         # coordinator -> first stage: token ids
         nbytes = req.input_tokens * self.model.token_bytes
         self._transfer(COORDINATOR, pipeline.stages[0].node, nbytes,
@@ -278,12 +304,16 @@ class Simulator:
             tokens = min(self.decode_chunk,
                          state.trace.output_tokens - state.decoded)
             kv_need = 0.0
-            # decode grows KV once past the scheduler's reservation estimate
-            past_estimate = state.decoded + tokens > self.kv_output_estimate
-            kv_grow = float(tokens) if past_estimate else 0.0
+            # decode grows KV only by the tokens that exceed the prompt-time
+            # reservation (charging the full chunk when the estimate is first
+            # crossed overcharged by up to decode_chunk-1 per node)
+            reserved = min(self.kv_output_estimate,
+                           state.trace.output_tokens)
+            kv_grow = float(max(0, state.decoded + tokens
+                                - max(reserved, state.decoded)))
         work = tokens * frac
         self._enqueue_work(st.node, work, kv_need, kv_grow,
-                           lambda: self._stage_done(state))
+                           lambda: self._stage_done(state), state)
 
     def _stage_done(self, state: _ReqState) -> None:
         pipe = state.pipeline
@@ -340,28 +370,36 @@ class Simulator:
                 per_tok = (self._now - state.first_token_s) / max(
                     1, state.decoded - 1)
                 self.metrics.decode_latencies.append(per_tok)
-        total = state.trace.input_tokens + state.decoded
-        for node in set(state.kv_reserved_nodes):
-            ns = self.nodes.get(node)
-            if ns is not None:
-                ns.kv_used = max(0.0, ns.kv_used - (
-                    state.trace.input_tokens + min(self.kv_output_estimate,
-                                                   state.trace.output_tokens)
-                    + max(0, state.decoded - self.kv_output_estimate)))
-        # scheduler KV reservations are per request, not per pipeline node
-        self.scheduler.finish(state.pipeline, total)
+        self._release_kv(state)
+        self._finish_reservation(state)
+
+    def _finish_reservation(self, state: _ReqState) -> None:
+        """Release the scheduler's KV reservation with exactly the amount
+        ``_arrive`` reserved (input + estimate) — releasing input + decoded
+        instead leaks phantom usage whenever decoded < estimate, eventually
+        pushing healthy nodes over the estimator's high-water mask.  The
+        release goes to the scheduler that *made* the reservation: after a
+        replan swap, releasing on the new estimator would erase other
+        requests' reservations (per-node clamp at 0)."""
+        sched = state.scheduler or self.scheduler
+        sched.finish(state.pipeline,
+                     state.trace.input_tokens + self.kv_output_estimate)
 
     def _restart(self, state: _ReqState) -> None:
         """Request lost a node mid-flight: restart from the prompt phase on a
-        freshly scheduled pipeline (KV on dead node is gone)."""
+        freshly scheduled pipeline (KV on dead node is gone).  The abandoned
+        pipeline's node + scheduler KV reservations are released here — the
+        surviving nodes would otherwise leak them on every failure."""
         self.metrics.restarts += 1
         state.restarted += 1
+        self._release_kv(state)
+        self._finish_reservation(state)
         if state.restarted > 5:
-            return  # drop pathological requests
+            return  # drop pathological requests (reservations just released)
         retry = TraceRequest(state.trace.request_id, self._now,
                              state.trace.input_tokens,
                              max(1, state.trace.output_tokens - state.decoded))
-        self._push(self._now + 0.1, self._arrive, retry)
+        self._push(self._now + 0.1, self._arrive, retry, state.restarted)
 
     # -- fault injection -------------------------------------------------------
     def fail_node(self, t: float, name: str) -> None:
@@ -372,6 +410,10 @@ class Simulator:
         if ns is None:
             return
         ns.alive = False
+        # requests queued (or waiting on KV) at the dead node must restart,
+        # not silently vanish with their reservations held on other nodes
+        stranded = [st for (_, _, st) in ns.pending]
+        stranded += [st for (*_, st) in ns.kv_wait]
         ns.pending.clear()
         ns.kv_wait.clear()
         if self.replan_fn is not None:
@@ -382,6 +424,8 @@ class Simulator:
                 if n in self.nodes and self.nodes[n].alive:
                     self.nodes[n].rate = self.cluster.node_token_throughput(
                         n, self.model, rng.num_layers)
+        for st in stranded:
+            self._restart(st)
 
     def slow_node(self, t: float, name: str, factor: float) -> None:
         self._push(t, self._do_slow, name, factor)

@@ -117,6 +117,81 @@ def test_node_failure_with_replan_keeps_serving():
     assert "n0" not in state["plan"].placement.assignment
 
 
+def test_kv_accounting_drains_to_zero():
+    """Decode growth past the reservation estimate must charge only the
+    excess (not the full chunk) so completion frees exactly what was
+    charged: node + scheduler KV must return to 0 after the trace drains."""
+    cluster = make_cluster(("A100", "T4"))
+    model = small_model(4)
+    p = plan(cluster, model, MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    sched = p.make_scheduler()
+    sim = Simulator(cluster, model, p.placement, sched, warmup_s=0.0,
+                    horizon_s=600.0, kv_output_estimate=10, decode_chunk=4)
+    # outputs cross the estimate at a non-chunk-aligned point (10 % 4 != 0)
+    trace = [TraceRequest(i, 0.0, 32, 23) for i in range(30)]
+    m = sim.run(trace)
+    assert m.completed_requests == len(trace)
+    for name, ns in sim.nodes.items():
+        assert abs(ns.kv_used) < 1e-6, (name, ns.kv_used)
+    if sched.kv is not None:
+        for node, usage in sched.kv.usage.items():
+            assert usage == 0.0, (node, usage)
+
+
+def test_scheduler_reservations_drain_when_outputs_short():
+    """Outputs *below* the reservation estimate: the scheduler must release
+    exactly what it reserved (input + estimate), not input + decoded — the
+    asymmetry left phantom usage that eventually high-water-masked nodes."""
+    cluster = make_cluster(("A100", "T4"))
+    model = small_model(4)
+    p = plan(cluster, model, MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    sched = p.make_scheduler()
+    sim = Simulator(cluster, model, p.placement, sched, warmup_s=0.0,
+                    horizon_s=600.0, kv_output_estimate=64, decode_chunk=4)
+    trace = [TraceRequest(i, 0.0, 32, 16) for i in range(40)]  # 16 < 64
+    m = sim.run(trace)
+    assert m.completed_requests == len(trace)
+    assert sched.kv is not None
+    for node, usage in sched.kv.usage.items():
+        assert usage == 0.0, (node, usage)
+    for name, ns in sim.nodes.items():
+        assert abs(ns.kv_used) < 1e-6, (name, ns.kv_used)
+
+
+def test_restart_releases_kv_reservations():
+    """Node failure: restarted requests must release node/scheduler KV on
+    the surviving nodes of the abandoned pipeline — kv_used drains to ~0
+    once every request has completed (or been dropped)."""
+    cluster = make_cluster(("A100", "A100", "A100"))
+    model = small_model(4)
+    p = plan(cluster, model, MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    state = {"plan": p}
+
+    def replan(dead):
+        new = replan_after_failure(state["plan"], dead,
+                                   MILPOptions(time_limit_s=8.0, lns_rounds=0))
+        state["plan"] = new
+        state["sched"] = new.make_scheduler()
+        return state["sched"], new.placement
+
+    sim = Simulator(cluster, model, p.placement, p.make_scheduler(),
+                    warmup_s=0.0, horizon_s=600.0, replan_fn=replan)
+    sim.fail_node(2.0, "n0")
+    trace = [TraceRequest(i, i * 0.05, 128, 16) for i in range(80)]
+    m = sim.run(trace)
+    assert m.restarts > 0
+    assert m.completed_requests > 0
+    for name, ns in sim.nodes.items():
+        if ns.alive:
+            assert abs(ns.kv_used) < 1e-6, (name, ns.kv_used)
+    # reservations release on the scheduler that made them: the post-replan
+    # estimator must drain to exactly 0 (pre-replan releases never touch it)
+    post = state["sched"].kv
+    if post is not None:
+        for node, usage in post.usage.items():
+            assert usage == 0.0, (node, usage)
+
+
 def test_straggler_degrades_gracefully():
     cluster = make_cluster(("A100", "A100"))
     model = small_model(4)
