@@ -1,14 +1,19 @@
 """End-to-end driver: serve a small model with batched requests through the
 full Helix pipeline — MILP placement, per-request IWRR pipelines, and the
-real JAX engine executing each stage's layer slice.
+ClusterRuntime executing each stage's layer slice on its own engine.
 
 This is the paper's system in miniature: the cluster-level scheduler decides
-*where* each request's layers run; each "node" runs a JAX Engine over its
-assigned contiguous layers (here all nodes share one process/CPU).
+*where* each request's layers run; each node runs a stage engine holding only
+its assigned contiguous layers (dense caches or a VRAM-sized page pool), and
+activations hop between nodes through the in-process Transport.
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py [--requests 8]
+      ... --force-stages 2 --check     # force a real multi-stage pipeline
+                                       # and verify token-for-token against
+                                       # a single full-model engine
 """
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -19,23 +24,10 @@ import numpy as np
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core import (COORDINATOR, MILPOptions, ModelProfile, plan)
-from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
-from repro.core.cluster import _full_mesh_links
+from repro.core import (MILPOptions, ModelProfile, make_serving_cluster, plan)
 from repro.models import init
-from repro.serving import (Engine, EngineConfig, PagedEngine, Request,
-                           full_rectangle_pages, pages_for_vram)
-
-
-def make_cluster(devs=("A100", "L4", "T4")):
-    nodes, regions = {}, {COORDINATOR: "r0"}
-    for i, d in enumerate(devs):
-        name = f"n{i}"
-        nodes[name] = NodeSpec(name, DEVICE_PROFILES[d], region="r0")
-        regions[name] = "r0"
-    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3,
-                             10e9 / 8, 1e-3)
-    return ClusterSpec(nodes=nodes, links=links)
+from repro.serving import (ClusterRuntime, Engine, EngineConfig,
+                           InProcessTransport, Request)
 
 
 def main() -> None:
@@ -43,70 +35,87 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--dense", action="store_true",
-                    help="use the dense per-slot engine instead of paged KV")
+                    help="dense per-slot stage engines instead of paged KV")
+    ap.add_argument("--force-stages", type=int, default=0,
+                    help="derate VRAM so placements need >= N stages")
+    ap.add_argument("--delay-ms", type=float, default=0.0,
+                    help="modelled inter-stage transport delay")
+    ap.add_argument("--check", action="store_true",
+                    help="verify token-for-token against one full engine")
     args = ap.parse_args()
 
     cfg = get_smoke_config("smollm_360m")
-    cluster = make_cluster()
+    if args.check:
+        # float32 so paged (Pallas online-softmax) and dense logits agree
+        # to argmax precision
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32")
     profile = ModelProfile.from_dims(
         cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
         cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    cluster = make_serving_cluster(profile, force_stages=args.force_stages)
 
     print("planning placement ...")
     p = plan(cluster, profile, MILPOptions(time_limit_s=10.0, lns_rounds=0,
                                            fgls_rounds=20))
     for node, rng in sorted(p.placement.assignment.items()):
-        print(f"  {node}: layers [{rng.start}, {rng.end})")
+        print(f"  {node}: layers [{rng.start}, {rng.end}) "
+              f"({cluster.nodes[node].device.name})")
 
-    sched = p.make_scheduler()
     params = init(cfg, jax.random.key(0))
-    # one Engine per node — in production each runs on its own slice; here
-    # they share the host and serve the full model for requests routed to
-    # them as first-stage (single-stage pipelines for this tiny model).
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
-    if args.dense:
-        engines = {node: Engine(cfg, params, ec)
-                   for node in p.placement.assignment}
-    else:
-        # paged KV: each node's pool is sized from *its* VRAM (capped at the
-        # full rectangle for this smoke model) — the memory heterogeneity
-        # Helix's placement exploits
-        page = 16
-        rect = full_rectangle_pages(cfg, max_batch=ec.max_batch,
-                                    max_len=ec.max_len, page_size=page)
-        engines = {}
-        for node, rng_ in sorted(p.placement.assignment.items()):
-            vram_pages = pages_for_vram(
-                cfg, cluster.nodes[node].vram_bytes, page_size=page,
-                layers_on_node=rng_.num_layers, max_pages=rect)
-            print(f"  {node}: pool {vram_pages} pages "
-                  f"({cluster.nodes[node].device.name})")
-            engines[node] = PagedEngine(cfg, params, ec,
-                                        num_pages=vram_pages, page_size=page)
+    transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
+    rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
+                        transport=transport)
+    if not args.dense:
+        for node, eng in sorted(rt.engines.items()):
+            print(f"  {node}: pool {eng.pool.num_pages} pages")
 
     rng = np.random.RandomState(0)
-    reqs = []
-    t0 = time.time()
-    for i in range(args.requests):
-        pipe = sched.schedule(prompt_tokens=10)
-        first = pipe.stages[0].node
-        r = Request(i, rng.randint(0, cfg.vocab_size, size=(10,)),
+    reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(10,)),
                     max_new_tokens=args.new_tokens)
-        engines[first].submit(r)
-        reqs.append((r, pipe))
-        print(f"req{i} -> pipeline "
-              + " -> ".join(s.node for s in pipe.stages))
-
-    for node, eng in engines.items():
-        eng.run_until_done(max_iters=500)
+            for i in range(args.requests)]
+    t0 = time.time()
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
     dt = time.time() - t0
 
-    done = sum(r.done for r, _ in reqs)
-    toks = sum(len(r.output) for r, _ in reqs)
+    stage_counts = []
+    for r in reqs:
+        pipe = rt.served[r.request_id]
+        stage_counts.append(len(pipe.stages))
+        print(f"req{r.request_id} -> "
+              + " -> ".join(f"{s.node}[{s.layers.start},{s.layers.end})"
+                            for s in pipe.stages))
+
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
     print(f"\nserved {done}/{len(reqs)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s on CPU)")
-    for r, _ in reqs[:3]:
+    for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.output}")
+    assert done == len(reqs), "not all requests completed"
+    if not args.dense:
+        assert all(v == 0 for v in rt.pool_pages_used().values()), \
+            "pages leaked"
+    if args.force_stages > 1:
+        assert max(stage_counts) >= args.force_stages, \
+            f"expected >= {args.force_stages}-stage pipelines, " \
+            f"got {stage_counts} — cross-node serving regressed"
+
+    if args.check:
+        ref = Engine(cfg, params, ec)
+        ref_reqs = [Request(r.request_id, r.prompt,
+                            max_new_tokens=r.max_new_tokens) for r in reqs]
+        for r in ref_reqs:
+            ref.submit(r)
+        ref.run_until_done(2000)
+        for r, rr in zip(reqs, ref_reqs):
+            assert r.output == rr.output, \
+                (r.request_id, r.output, rr.output)
+        print("check: token-for-token identical to a single full-model "
+              "engine")
 
 
 if __name__ == "__main__":

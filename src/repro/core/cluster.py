@@ -234,6 +234,34 @@ def _full_mesh_links(names: Sequence[str], regions: Mapping[str, str],
     return links
 
 
+def make_serving_cluster(profile: ModelProfile,
+                         devs: Sequence[str] = ("A100", "L4", "T4"),
+                         force_stages: int = 0,
+                         param_frac: float = 0.5) -> ClusterSpec:
+    """Small full-mesh heterogeneous cluster for the serving drivers.
+
+    With ``force_stages`` the per-node VRAM is derated so no node can hold
+    more than ``ceil(num_layers / force_stages)`` layers under the planner's
+    ``param_frac`` VRAM convention — the MILP then *must* split the model
+    into at least that many pipeline stages.
+    """
+    nodes: Dict[str, NodeSpec] = {}
+    regions: Dict[str, str] = {COORDINATOR: "r0"}
+    for i, d in enumerate(devs):
+        dev = DEVICE_PROFILES[d.strip()]
+        if force_stages > 0:
+            cap = -(-profile.num_layers // force_stages)
+            dev = dataclasses.replace(
+                dev,
+                vram_bytes=(cap + 0.5) * profile.layer_param_bytes / param_frac)
+        name = f"n{i}"
+        nodes[name] = NodeSpec(name, dev, region="r0")
+        regions[name] = "r0"
+    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3,
+                             10e9 / 8, 1e-3)
+    return ClusterSpec(nodes=nodes, links=links)
+
+
 def make_single_cluster(seed_counts: Optional[Mapping[str, int]] = None) -> ClusterSpec:
     """Paper §5.2 single-cluster: 4×A100 + 8×L4 + 12×T4, 10 Gb/s, <1 ms."""
     counts = dict(seed_counts or {"A100": 4, "L4": 8, "T4": 12})

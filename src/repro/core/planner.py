@@ -29,10 +29,9 @@ class Plan:
     milp: Optional[PlacementResult] = None
 
     def make_scheduler(self, partial_inference: bool = True,
-                       with_kv_estimation: bool = True,
-                       param_frac: float = 0.5) -> HelixScheduler:
+                       with_kv_estimation: bool = True) -> HelixScheduler:
         kv = KVEstimator.from_placement(self.cluster, self.model,
-                                        self.placement, param_frac) \
+                                        self.placement) \
             if with_kv_estimation else None
         return HelixScheduler(self.cluster, self.model, self.placement,
                               self.flows, partial_inference, kv)

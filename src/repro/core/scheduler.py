@@ -109,10 +109,16 @@ class KVEstimator:
     def release(self, node: str, tokens: float) -> None:
         self.usage[node] = max(0.0, self.usage[node] - tokens)
 
+    def sync(self, node: str, tokens: float) -> None:
+        """Install a node's *measured* KV occupancy (e.g. true ``PagePool``
+        usage reported by the serving runtime), replacing the running
+        reserve/release estimate — the §4.2 mask then reflects reality
+        instead of reservations drifting from actual paged usage."""
+        self.usage[node] = max(0.0, tokens)
+
     @staticmethod
     def from_placement(cluster: ClusterSpec, model: ModelProfile,
-                       placement: Placement, param_frac: float = 0.5
-                       ) -> "KVEstimator":
+                       placement: Placement) -> "KVEstimator":
         caps: Dict[str, float] = {}
         for node, rng in placement.assignment.items():
             vram = cluster.nodes[node].vram_bytes

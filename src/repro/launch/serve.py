@@ -9,6 +9,11 @@ Paged-KV engine (per-node worker; pool sized from node VRAM like the
 simulator sizes KV capacity; Pallas kernel interpreted off-TPU):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
       --paged --vram-gb 16 --batch 4 --prompt 40 --new-tokens 8
+
+Multi-node cluster serving (MILP placement -> IWRR pipelines -> stage
+engines under the ClusterRuntime; one process plays every node):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
+      --cluster A100,L4,T4 --stages 2 --batch 4 --prompt 10 --new-tokens 8
 """
 from __future__ import annotations
 
@@ -20,11 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.core import (MILPOptions, ModelProfile, make_serving_cluster,
+                        plan)
 from repro.dist.sharding import SERVE_RULES, tree_shardings
 from repro.launch.steps import abstract_params
 from repro.models import decode_step, init, init_caches, prefill
 from repro.models import model as M
-from repro.serving import (EngineConfig, PagedEngine, Request,
+from repro.serving import (ClusterRuntime, EngineConfig, PagedEngine, Request,
                            full_rectangle_pages, pages_for_vram)
 
 
@@ -60,6 +67,43 @@ def run_paged(cfg, args) -> None:
     print("sampled ids:", [r.output for r in reqs[:2]])
 
 
+def run_cluster(cfg, args) -> None:
+    """Multi-node serving: MILP placement over a (VRAM-derated) cluster, one
+    stage engine per node, requests walking IWRR pipelines through the
+    ClusterRuntime."""
+    profile = ModelProfile.from_dims(
+        cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
+        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    cluster = make_serving_cluster(profile, devs=args.cluster.split(","),
+                                   force_stages=args.stages)
+    p = plan(cluster, profile, MILPOptions(time_limit_s=10.0, lns_rounds=0,
+                                           fgls_rounds=20))
+    for node, rng_ in sorted(p.placement.assignment.items()):
+        print(f"  {node}: layers [{rng_.start}, {rng_.end})")
+    params = init(cfg, jax.random.key(0))
+    ec = EngineConfig(max_batch=args.batch, max_len=args.max_len,
+                      prompt_len=min(16, args.max_len))
+    rt = ClusterRuntime(cfg, params, p, ec, paged=args.paged or not args.dense,
+                        page_size=args.page_size)
+    rng = np.random.RandomState(0)
+    reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.batch)]
+    t0 = time.time()
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in reqs)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        print(f"req{r.request_id} -> "
+              + " -> ".join(s.node for s in rt.served[r.request_id].stages))
+    print(f"cluster: {len(reqs)} reqs, {toks} tokens in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    print("sampled ids:", [r.output for r in reqs[:2]])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -71,12 +115,22 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged-KV engine (single node)")
+    ap.add_argument("--dense", action="store_true",
+                    help="with --cluster: dense stage engines, not paged")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--vram-gb", type=float, default=16.0,
                     help="node VRAM for pool sizing (0 = full rectangle)")
+    ap.add_argument("--cluster", default="",
+                    help="comma-separated device types: serve a multi-node "
+                         "cluster through the ClusterRuntime")
+    ap.add_argument("--stages", type=int, default=0,
+                    help="with --cluster: derate VRAM to force >= N stages")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.cluster:
+        run_cluster(cfg, args)
+        return
     if args.paged:
         run_paged(cfg, args)
         return

@@ -3,4 +3,6 @@ from .model import (decode_step, encode, forward, init, init_caches, loss_fn,
                     param_specs, prefill)
 from .paged import (all_blocks_paged, decode_step_paged, init_caches_paged,
                     num_paged_layers, prefill_chunk_paged)
+from .stage import (stage_blocks, stage_cache_init, stage_decode,
+                    stage_num_paged_layers, stage_params, stage_prefill)
 from .common import abstract_shapes, init_params, logical_axes, ParamSpec

@@ -386,6 +386,44 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, cache_pos):
     return logits, new_caches
 
 
+def fill_prefill_cache(cfg: ModelConfig, b: BlockSpec, raw_cache, batch: int,
+                       seq_len: int, max_len: int, dtype):
+    """Convert one block's prefill outputs (full k/v or final state) into the
+    decode cache layout (ring/dense buffers sized max_len)."""
+    B, S = batch, seq_len
+    window = b.window if b.attn in ("swa", "local") else 0
+    if b.kind != "attn":
+        return raw_cache
+    if cfg.mla_kv_lora_rank:
+        c_kv, k_rope = raw_cache
+        tgt = mla_cache_init(cfg, B, max_len, dtype)
+        n = min(S, max_len)
+        tgt["c"] = tgt["c"].at[:, :n].set(c_kv[:, -n:])
+        tgt["r"] = tgt["r"].at[:, :n].set(k_rope[:, -n:])
+        pos_vals = jnp.broadcast_to(jnp.arange(S)[-n:], (B, n))
+        tgt["pos"] = tgt["pos"].at[:, :n].set(pos_vals)
+        return tgt
+    inner = raw_cache["self"] if isinstance(raw_cache, dict) and \
+        "self" in raw_cache else raw_cache
+    k, v = inner
+    tgt = gqa_cache_init(cfg, B, max_len, window, dtype)
+    W = tgt["k"].shape[1]
+    n = min(S, W)
+    # ring layout: token at absolute pos p sits at slot p % W
+    last_pos = jnp.arange(S - n, S)
+    slots = (last_pos % W) if window else last_pos
+    tgt["k"] = tgt["k"].at[:, slots].set(k[:, -n:])
+    tgt["v"] = tgt["v"].at[:, slots].set(v[:, -n:])
+    tgt["pos"] = tgt["pos"].at[:, slots].set(
+        jnp.broadcast_to(last_pos, (B, n)))
+    out = tgt
+    if isinstance(raw_cache, dict) and "cross" in raw_cache:
+        # keep the encoder length static/unpadded: zero-padded slots
+        # would receive softmax mass at decode time
+        out = {"self": tgt, "cross": raw_cache["cross"]}
+    return out
+
+
 def prefill(cfg: ModelConfig, params, tokens, *, max_len: Optional[int] = None,
             encoder_frames=None, skip_masked_chunks=False):
     """Process the prompt, returning (last-token logits, caches) ready for
@@ -399,39 +437,7 @@ def prefill(cfg: ModelConfig, params, tokens, *, max_len: Optional[int] = None,
     dtype = h.dtype
 
     def fill_cache(b: BlockSpec, raw_cache):
-        """Convert prefill outputs (full k/v or final state) into the decode
-        cache layout (ring/dense buffers sized max_len)."""
-        window = b.window if b.attn in ("swa", "local") else 0
-        if b.kind != "attn":
-            return raw_cache
-        if cfg.mla_kv_lora_rank:
-            c_kv, k_rope = raw_cache
-            tgt = mla_cache_init(cfg, B, max_len, dtype)
-            n = min(S, max_len)
-            tgt["c"] = tgt["c"].at[:, :n].set(c_kv[:, -n:])
-            tgt["r"] = tgt["r"].at[:, :n].set(k_rope[:, -n:])
-            pos_vals = jnp.broadcast_to(jnp.arange(S)[-n:], (B, n))
-            tgt["pos"] = tgt["pos"].at[:, :n].set(pos_vals)
-            return tgt
-        inner = raw_cache["self"] if isinstance(raw_cache, dict) and \
-            "self" in raw_cache else raw_cache
-        k, v = inner
-        tgt = gqa_cache_init(cfg, B, max_len, window, dtype)
-        W = tgt["k"].shape[1]
-        n = min(S, W)
-        # ring layout: token at absolute pos p sits at slot p % W
-        last_pos = jnp.arange(S - n, S)
-        slots = (last_pos % W) if window else last_pos
-        tgt["k"] = tgt["k"].at[:, slots].set(k[:, -n:])
-        tgt["v"] = tgt["v"].at[:, slots].set(v[:, -n:])
-        tgt["pos"] = tgt["pos"].at[:, slots].set(
-            jnp.broadcast_to(last_pos, (B, n)))
-        out = tgt
-        if isinstance(raw_cache, dict) and "cross" in raw_cache:
-            # keep the encoder length static/unpadded: zero-padded slots
-            # would receive softmax mass at decode time
-            out = {"self": tgt, "cross": raw_cache["cross"]}
-        return out
+        return fill_prefill_cache(cfg, b, raw_cache, B, S, max_len, dtype)
 
     caches: Dict[str, Any] = {}
     if cfg.prologue:

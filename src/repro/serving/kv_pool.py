@@ -56,10 +56,15 @@ class PagePool:
     """
 
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
-                 max_batch: int, max_seq_len: int, dtype=None):
+                 max_batch: int, max_seq_len: int, dtype=None,
+                 paged_layers: Optional[int] = None):
         self.cfg = cfg
         self.page = page_size
-        self.num_layers = num_paged_layers(cfg)
+        # a stage engine's pool covers only the node's layer slice: pass the
+        # slice's paged-block count so a token costs one page per *local*
+        # paged layer, not per model layer
+        self.num_layers = paged_layers if paged_layers is not None \
+            else num_paged_layers(cfg)
         if self.num_layers == 0:
             raise ValueError(f"{cfg.name}: no full-attention GQA blocks — "
                              "nothing to page; use the dense engine")
@@ -88,6 +93,17 @@ class PagePool:
     def used(self) -> int:
         """Pages currently allocated (scratch page excluded)."""
         return (self.num_pages - 1) - len(self._free)
+
+    @property
+    def tokens_used(self) -> int:
+        """Token capacity currently allocated (block granularity) — what the
+        scheduler's KVEstimator should see as this node's true occupancy."""
+        return int(self._nblocks.sum()) * self.page
+
+    @property
+    def tokens_capacity(self) -> int:
+        """Total token capacity of the pool (block granularity)."""
+        return ((self.num_pages - 1) // self.num_layers) * self.page
 
     def capacity_tokens(self, slot: int) -> int:
         return int(self._nblocks[slot]) * self.page
@@ -127,12 +143,16 @@ class PagePool:
 
 
 def full_rectangle_pages(cfg: ModelConfig, *, max_batch: int, max_len: int,
-                         page_size: int) -> int:
+                         page_size: int,
+                         paged_layers: Optional[int] = None) -> int:
     """Pages for a dense-equivalent full allocation — every slot holding its
     whole ``max_len`` budget — plus the scratch page.  Pools this size can
-    never block or preempt; smaller pools oversubscribe."""
+    never block or preempt; smaller pools oversubscribe.  ``paged_layers``
+    overrides the model-wide paged-block count for stage-slice pools."""
     blocks = -(-max_len // page_size)
-    return 1 + blocks * num_paged_layers(cfg) * max_batch
+    layers = paged_layers if paged_layers is not None \
+        else num_paged_layers(cfg)
+    return 1 + blocks * layers * max_batch
 
 
 def pages_for_vram(cfg: ModelConfig, vram_bytes: float, *, page_size: int,

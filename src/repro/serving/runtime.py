@@ -1,0 +1,528 @@
+"""ClusterRuntime: execute IWRR pipelines across per-node stage engines.
+
+This is the execution plane the paper's runtime scheduling (§4) assumes: the
+MILP places layer slices on nodes, max-flow IWRR walks per-request pipelines,
+and *this* module actually runs them — each node owns a stage engine over its
+assigned ``LayerRange``, activations hop between nodes through a pluggable
+``Transport``, and every node continuously batches whatever stage-work (from
+any request, entering at any layer) is resident each iteration.
+
+Event loop: a virtual-clock heap of deliveries.  Prefill hops execute inline
+as they arrive (per-request; chunked across stages for all-paged stacks);
+decode inputs accumulate in per-node inboxes and run as ONE batched
+``decode_stage`` per node per iteration — per-node continuous batching.  The
+final stage samples the token and ships it to the coordinator, which starts
+the next decode pass (one outstanding token per request, as in the paper).
+
+Memory: admission takes a slot (and, paged, the prompt's pages) on *every*
+stage node up front; completion and preemption release KV on every node of
+the pipeline.  When a pool runs dry mid-decode the newest resident request is
+preempted pipeline-wide (recompute-on-readmit keeps its generated tokens).
+
+Scheduler feedback: after every iteration the runtime writes each node's true
+pool occupancy into the scheduler's ``KVEstimator`` (``sync``), and installs
+real pool capacities at startup — IWRR masking reflects actual paged usage
+rather than arrival-time reservations drifting from reality.
+
+Failover: ``fail_node`` drops a node's engine and requeues every in-flight
+request that crossed it; after the planner replans, ``apply_plan`` rebuilds
+engines whose slices changed, swaps IWRR weights (``update_weights`` when the
+placement survived, a fresh scheduler otherwise), and the requeued requests
+re-prefill (prompt + generated tokens) on fresh pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import defaultdict, deque
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.cluster import COORDINATOR
+from ..core.placement import LayerRange
+from ..models.paged import all_blocks_paged
+from ..models.stage import stage_num_paged_layers
+from .engine import EngineConfig, Request
+from .kv_pool import full_rectangle_pages, pages_for_vram
+from .stage_engine import (DecodeItem, PagedStageEngine, StageEngine,
+                           make_stage_engine)
+
+
+# ---------------------------------------------------------------------------
+# Transport
+# ---------------------------------------------------------------------------
+
+class Transport:
+    """Moves stage payloads (activations / token ids) between nodes.
+
+    ``send`` must eventually call ``deliver(payload)``; implementations may
+    move real bytes (RPC) or just model the delay.  The runtime binds
+    ``schedule(delay_s, fn)`` at construction so in-process transports can
+    put deliveries on the runtime's virtual clock.
+    """
+
+    def bind(self, schedule: Callable[[float, Callable[[], None]], None]
+             ) -> None:
+        self._schedule = schedule
+
+    def send(self, src: str, dst: str, payload: Any, nbytes: float,
+             deliver: Callable[[Any], None]) -> None:
+        raise NotImplementedError
+
+
+class InProcessTransport(Transport):
+    """Same-process transport: payloads are handed over by reference after an
+    optional modelled link delay (latency + nbytes/bandwidth).  This is the
+    seam a real RPC transport plugs into later."""
+
+    def __init__(self, default_delay_s: float = 0.0,
+                 link_delay_s: Optional[Mapping[Tuple[str, str], float]] = None,
+                 bandwidth_bytes_per_s: float = 0.0):
+        self.default_delay_s = default_delay_s
+        self.link_delay_s = dict(link_delay_s or {})
+        self.bandwidth = bandwidth_bytes_per_s
+        self.transfers: Dict[Tuple[str, str], int] = defaultdict(int)
+
+    def delay(self, src: str, dst: str, nbytes: float) -> float:
+        d = self.link_delay_s.get((src, dst), self.default_delay_s)
+        if self.bandwidth > 0:
+            d += nbytes / self.bandwidth
+        return d
+
+    def send(self, src: str, dst: str, payload: Any, nbytes: float,
+             deliver: Callable[[Any], None]) -> None:
+        self.transfers[(src, dst)] += 1
+        self._schedule(self.delay(src, dst, nbytes),
+                       lambda: deliver(payload))
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Job:
+    req: Request
+    pipe: Any = None                 # RequestPipeline (kept across preemption)
+    slots: Dict[str, int] = dataclasses.field(default_factory=dict)
+    pos: int = 0                     # tokens resident in caches
+    epoch: int = 0                   # bumped on preempt/requeue: stale msgs die
+    seq: int = -1                    # admission order (preemption victims)
+
+    @property
+    def resumed(self) -> bool:
+        return bool(self.req.output)
+
+
+class ClusterRuntime:
+    """Orchestrates one stage engine per placed node (see module docstring).
+
+    ``plan`` is a ``repro.core.planner.Plan``; engines are built from its
+    placement, with paged pools sized from each node's own VRAM (capped at
+    the full rectangle, floored at one max_len request).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, plan, engine_cfg: EngineConfig,
+                 *, paged: bool = True, page_size: int = 16,
+                 pool_pages: Optional[Mapping[str, int]] = None,
+                 transport: Optional[Transport] = None,
+                 interpret: Optional[bool] = None, rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ec = engine_cfg
+        self.paged = paged
+        self.page_size = page_size
+        self.pool_pages = dict(pool_pages or {})
+        self.interpret = interpret
+        self.rng_seed = rng_seed
+        self.cluster = plan.cluster
+        self.placement = plan.placement
+        self.profile = plan.model
+        if plan.model.num_layers != cfg.num_layers:
+            raise ValueError(f"plan covers {plan.model.num_layers} layers; "
+                             f"{cfg.name} has {cfg.num_layers}")
+        self.scheduler = plan.make_scheduler()
+        self.transport = transport or InProcessTransport()
+        self.transport.bind(lambda d, fn: self._push(self._now + d, fn))
+        self._chunked = paged and all_blocks_paged(cfg)
+
+        self.engines: Dict[str, Any] = {}
+        for node, rng in sorted(self.placement.assignment.items()):
+            self.engines[node] = self._make_engine(node, rng)
+        self._sync_kv(capacities=True)
+
+        self.queue: deque = deque()      # _Job awaiting admission
+        self.jobs: Dict[int, _Job] = {}  # request_id -> active job
+        self._ready: Dict[str, List[dict]] = defaultdict(list)
+        self._events: List = []
+        self._eseq = 0
+        self._jseq = 0
+        self._now = 0.0
+        self.tokens_produced = 0
+        self.completed = 0
+        # request_id -> the pipeline it was (last) served on, for
+        # introspection: drivers assert multi-stage serving actually happened
+        self.served: Dict[int, Any] = {}
+
+    # -- engine construction ------------------------------------------------
+    def _make_engine(self, node: str, rng: LayerRange):
+        n_paged = stage_num_paged_layers(self.cfg, rng)
+        if not self.paged or n_paged == 0:
+            # hybrid models can hand a node an all-SSM/MLA slice with no
+            # paged block at all — that node serves dense even in paged mode
+            return StageEngine(self.cfg, self.params, rng, self.ec,
+                               rng_seed=self.rng_seed)
+        rect = full_rectangle_pages(self.cfg, max_batch=self.ec.max_batch,
+                                    max_len=self.ec.max_len,
+                                    page_size=self.page_size,
+                                    paged_layers=n_paged)
+        if node in self.pool_pages:
+            pages = self.pool_pages[node]
+        else:
+            pages = pages_for_vram(self.cfg,
+                                   self.cluster.nodes[node].vram_bytes,
+                                   page_size=self.page_size,
+                                   layers_on_node=rng.num_layers,
+                                   max_pages=rect)
+            # floor: one full-budget request must always fit
+            blocks = -(-self.ec.max_len // self.page_size)
+            pages = max(pages, 1 + blocks * n_paged)
+        return PagedStageEngine(self.cfg, self.params, rng, self.ec,
+                                num_pages=pages, page_size=self.page_size,
+                                interpret=self.interpret,
+                                rng_seed=self.rng_seed)
+
+    # -- event machinery ----------------------------------------------------
+    def _push(self, t: float, fn: Callable[[], None]) -> None:
+        self._eseq += 1
+        heapq.heappush(self._events, (t, self._eseq, fn))
+
+    def _send(self, src: str, dst: str, payload, nbytes: float,
+              deliver: Callable[[Any], None]) -> None:
+        self.transport.send(src, dst, payload, nbytes, deliver)
+
+    def _act_bytes(self, n_tokens: int) -> float:
+        elt = {"bfloat16": 2, "float32": 4}[self.cfg.param_dtype]
+        return float(n_tokens * self.cfg.d_model * elt)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(req.prompt) > self.ec.max_len:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens exceeds "
+                             f"max_len {self.ec.max_len}; refusing to "
+                             "truncate")
+        req.submitted_s = time.time()
+        self.queue.append(_Job(req))
+
+    def run_until_done(self, max_iters: int = 100000) -> None:
+        for _ in range(max_iters):
+            if not (self.queue or self.jobs or self._events or self._ready):
+                return
+            if not self.step():
+                raise RuntimeError(
+                    "runtime stalled: queued requests cannot be admitted "
+                    "(cluster slots/pools too small?)")
+        raise RuntimeError(f"not done after {max_iters} iterations")
+
+    def step(self) -> bool:
+        """One runtime iteration: admit, drain deliveries due now, then one
+        batched decode per node with resident stage-work.  Returns whether
+        anything progressed."""
+        progressed = self._admit()
+        if self._events:
+            self._now = max(self._now, self._events[0][0])
+            while self._events and self._events[0][0] <= self._now + 1e-12:
+                _, _, fn = heapq.heappop(self._events)
+                fn()
+                progressed = True
+        for node in [n for n, v in self._ready.items() if v]:
+            work = self._ready.pop(node)
+            work = [w for w in work if w["job"].epoch == w["epoch"]]
+            while work:
+                self._decode_node(node, work[:self.ec.max_batch])
+                work = work[self.ec.max_batch:]
+                progressed = True
+        self._sync_kv()
+        return progressed
+
+    # -- KV feedback --------------------------------------------------------
+    def _sync_kv(self, capacities: bool = False) -> None:
+        kv = self.scheduler.kv
+        if kv is None:
+            return
+        for node, eng in self.engines.items():
+            if capacities:
+                kv.capacity_tokens[node] = float(eng.kv_tokens_capacity())
+            kv.sync(node, float(eng.kv_tokens_used()))
+
+    # -- admission ----------------------------------------------------------
+    def _prefill_tokens(self, job: _Job) -> np.ndarray:
+        """Tokens to prefill: the prompt, plus — after preemption/failover —
+        all generated output but the last token (recompute; the last token
+        restarts decode)."""
+        prompt = np.asarray(job.req.prompt, np.int32)
+        if len(job.req.output) > 1:
+            prompt = np.concatenate(
+                [prompt, np.asarray(job.req.output[:-1], np.int32)])
+        return prompt
+
+    def _admit(self) -> bool:
+        progressed = False
+        while self.queue:
+            job = self.queue[0]
+            if job.pipe is None:
+                try:
+                    job.pipe = self.scheduler.schedule()
+                except RuntimeError:
+                    break               # no route (mid-replan): wait
+            S = len(self._prefill_tokens(job))
+            need = min(S + 1, self.ec.max_len)
+            taken: List[Tuple[str, int]] = []
+            ok = True
+            for st in job.pipe.stages:
+                eng = self.engines.get(st.node)
+                slot = eng.alloc_slot(job.req.request_id) if eng else None
+                if slot is None or not eng.ensure(slot, need):
+                    if slot is not None:
+                        eng.free_slot(slot)
+                    ok = False
+                    break
+                taken.append((st.node, slot))
+            if not ok:
+                for node, slot in taken:
+                    self.engines[node].release(slot)
+                break                   # FIFO: wait for running work to free
+            self.queue.popleft()
+            job.slots = dict(taken)
+            job.pos = S
+            job.seq = self._jseq
+            self._jseq += 1
+            self.jobs[job.req.request_id] = job
+            self.served[job.req.request_id] = job.pipe
+            self._dispatch_prefill(job)
+            progressed = True
+        return progressed
+
+    def _dispatch_prefill(self, job: _Job) -> None:
+        tokens = self._prefill_tokens(job)
+        first = job.pipe.stages[0].node
+        if self._chunked:
+            chunk = tokens[:max(1, self.ec.prompt_len)]
+            self._send(COORDINATOR, first, chunk,
+                       len(chunk) * self.profile.token_bytes,
+                       self._hop(job, 0, off=0))
+        else:
+            self._send(COORDINATOR, first, tokens,
+                       len(tokens) * self.profile.token_bytes,
+                       self._hop(job, 0, off=None))
+
+    # -- prefill hops -------------------------------------------------------
+    def _hop(self, job: _Job, si: int, off: Optional[int]
+             ) -> Callable[[Any], None]:
+        epoch = job.epoch
+        return lambda payload: self._prefill_at(job, epoch, si, payload, off)
+
+    def _prefill_at(self, job: _Job, epoch: int, si: int, x,
+                    off: Optional[int]) -> None:
+        if job.epoch != epoch:
+            return                      # preempted/requeued mid-flight
+        st = job.pipe.stages[si]
+        eng = self.engines[st.node]
+        slot = job.slots[st.node]
+        entry = st.layers.start
+        if self._chunked:
+            out = eng.prefill_chunk(slot, x, entry, off)
+        else:
+            out = eng.prefill_stage(slot, x, entry)
+        last = si == len(job.pipe.stages) - 1
+        n_tok = (len(x) if entry == 0 else x.shape[1])
+        if not last:
+            nxt = job.pipe.stages[si + 1].node
+            self._send(st.node, nxt, out, self._act_bytes(n_tok),
+                       self._hop(job, si + 1, off))
+        if self._chunked and si == 0:
+            # stage 0 freed: stream the next chunk in behind this one
+            tokens = self._prefill_tokens(job)
+            nxt_off = off + n_tok
+            if nxt_off < len(tokens):
+                chunk = tokens[nxt_off:nxt_off + max(1, self.ec.prompt_len)]
+                self._send(COORDINATOR, st.node, chunk,
+                           len(chunk) * self.profile.token_bytes,
+                           self._hop(job, 0, off=nxt_off))
+        if last and (off is None or off + n_tok >= job.pos):
+            # final chunk left the final stage: out is last-token logits
+            if job.resumed:
+                tok = job.req.output[-1]      # sampled before eviction
+            else:
+                tok = eng.sample(out, job.req.temperature)
+            self._send(st.node, COORDINATOR, tok, self.profile.token_bytes,
+                       lambda t: self._on_token(job, epoch, t, first=True))
+
+    # -- token arrivals (coordinator) ----------------------------------------
+    def _on_token(self, job: _Job, epoch: int, tok: int, first: bool) -> None:
+        if job.epoch != epoch:
+            return
+        req = job.req
+        reason = None
+        if first:
+            if not job.resumed:
+                req.output.append(int(tok))
+                req.first_token_s = time.time()
+                self.tokens_produced += 1
+                if int(tok) == self.ec.eos_token:
+                    reason = "stop"
+                elif req.max_new_tokens <= 1:
+                    reason = "length"
+                elif job.pos >= self.ec.max_len:
+                    reason = "length"
+        else:
+            req.output.append(int(tok))
+            self.tokens_produced += 1
+            job.pos += 1
+            if int(tok) == self.ec.eos_token:
+                reason = "stop"
+            elif len(req.output) >= req.max_new_tokens:
+                reason = "length"
+            elif job.pos >= self.ec.max_len:
+                reason = "length"
+        if reason is not None:
+            self._complete(job, reason)
+            return
+        self._dispatch_decode(job)
+
+    def _dispatch_decode(self, job: _Job) -> None:
+        first = job.pipe.stages[0].node
+        epoch = job.epoch
+        tok = job.req.output[-1]
+        self._send(COORDINATOR, first, tok, self.profile.token_bytes,
+                   lambda t: self._ready[first].append(
+                       dict(job=job, epoch=epoch, si=0, tok=int(t), h=None)))
+
+    # -- decode (per-node continuous batching) -------------------------------
+    def _decode_node(self, node: str, work: List[dict]) -> None:
+        eng = self.engines.get(node)
+        if eng is None:
+            return
+        # grow pools oldest-first; preempt the newest resident request
+        # (pipeline-wide) when this node's pool runs dry
+        for w in sorted(work, key=lambda w: w["job"].seq):
+            job = w["job"]
+            if job.epoch != w["epoch"]:
+                continue
+            while not eng.ensure(job.slots[node], job.pos + 1):
+                live = [j for j in self.jobs.values() if node in j.slots]
+                victim = max(live, key=lambda j: j.seq)
+                self._preempt(victim)
+                if victim is job:
+                    break
+        work = [w for w in work if w["job"].epoch == w["epoch"]]
+        if not work:
+            return
+        items = [DecodeItem(slot=w["job"].slots[node], pos=w["job"].pos,
+                            entry=w["job"].pipe.stages[w["si"]].layers.start,
+                            token=w["tok"], h=w["h"]) for w in work]
+        outs = eng.decode_stage(items)
+        for w, out in zip(work, outs):
+            job = w["job"]
+            si = w["si"]
+            epoch = w["epoch"]
+            if si == len(job.pipe.stages) - 1:
+                tok = eng.sample(out.logits, job.req.temperature)
+                self._send(node, COORDINATOR, tok, self.profile.token_bytes,
+                           lambda t, j=job, e=epoch:
+                           self._on_token(j, e, t, first=False))
+            else:
+                nxt = job.pipe.stages[si + 1].node
+                self._send(node, nxt, out.h, self._act_bytes(1),
+                           lambda h, j=job, e=epoch, s=si + 1, n=nxt:
+                           self._ready[n].append(
+                               dict(job=j, epoch=e, si=s, tok=0, h=h)))
+
+    # -- completion / preemption ---------------------------------------------
+    def _release_all(self, job: _Job) -> None:
+        for node, slot in job.slots.items():
+            eng = self.engines.get(node)
+            if eng is not None:
+                eng.release(slot)
+        job.slots = {}
+
+    def _complete(self, job: _Job, reason: str) -> None:
+        req = job.req
+        req.done = True
+        req.finish_reason = reason
+        req.finished_s = time.time()
+        self._release_all(job)
+        self.jobs.pop(req.request_id, None)
+        self.completed += 1
+
+    def _preempt(self, job: _Job) -> None:
+        """Pool exhausted: evict pipeline-wide, keep generated tokens, requeue
+        at the front (recompute-on-readmit, same pipeline)."""
+        self._requeue(job, clear_pipe=False)
+
+    # -- failover ------------------------------------------------------------
+    def fail_node(self, name: str) -> None:
+        """Kill a node's engine; every request whose pipeline crossed it is
+        requeued (its KV on survivors released) pending a replanned pipeline."""
+        self.engines.pop(name, None)
+        for job in list(self.jobs.values()):
+            if name in job.pipe.nodes:
+                self._requeue(job, clear_pipe=True)
+        for job in self.queue:
+            if job.pipe is not None and name in job.pipe.nodes:
+                job.pipe = None
+
+    def _requeue(self, job: _Job, clear_pipe: bool) -> None:
+        job.epoch += 1
+        self._release_all(job)
+        if clear_pipe:
+            job.pipe = None
+        self.jobs.pop(job.req.request_id, None)
+        job.req.preemptions += 1
+        self.queue.appendleft(job)
+
+    def apply_plan(self, plan) -> None:
+        """Adopt a replanned placement: rebuild engines whose slice changed
+        (requeueing their resident requests), swap IWRR weights in place when
+        the placement survived, else install a fresh scheduler, and re-sync
+        true pool occupancy into the KV estimator."""
+        new_assign = plan.placement.assignment
+        for node in [n for n in self.engines if n not in new_assign]:
+            self.fail_node(node)
+        changed = set()
+        for node, rng in sorted(new_assign.items()):
+            if node in self.engines and self.placement.assignment.get(node) == rng:
+                continue
+            changed.add(node)
+            for job in list(self.jobs.values()):
+                if node in job.slots:
+                    self._requeue(job, clear_pipe=True)
+            self.engines[node] = self._make_engine(node, rng)
+        # queued jobs (e.g. preempted ones holding their old pipeline) whose
+        # cached pipeline crosses a rebuilt node would execute stale layer
+        # ranges — force them to reschedule
+        for job in self.queue:
+            if job.pipe is not None and changed.intersection(job.pipe.nodes):
+                job.pipe = None
+        same = self.placement.assignment == new_assign
+        self.cluster = plan.cluster
+        self.placement = plan.placement
+        self.profile = plan.model
+        if same and self.scheduler.placement.assignment == new_assign:
+            self.scheduler.update_weights(plan.flows)
+        else:
+            kv_old = self.scheduler.kv
+            self.scheduler = plan.make_scheduler()
+            if self.scheduler.kv is not None and kv_old is not None:
+                self.scheduler.kv.high_water = kv_old.high_water
+        self._sync_kv(capacities=True)
+
+    # -- introspection --------------------------------------------------------
+    def pool_pages_used(self) -> Dict[str, int]:
+        return {n: e.pool.used for n, e in self.engines.items()
+                if isinstance(e, PagedStageEngine)}

@@ -1,0 +1,331 @@
+"""Per-node stage engines: the execution half of a Helix compute node.
+
+``Engine``/``PagedEngine`` (engine.py) own the whole request lifecycle for a
+single full-model node.  A *stage engine* is the same machinery split at the
+stage boundary: it holds only the params (``models.stage.stage_params``) and
+KV for one node's assigned ``LayerRange`` and exposes a stage-level API the
+``ClusterRuntime`` drives:
+
+  prefill_stage(slot, x, entry)    prompt pass for one request; ``x`` is
+                                   token ids (entry layer 0) or incoming
+                                   activations; returns activations, or
+                                   last-token logits at the final stage
+  prefill_chunk(slot, x, entry, start)   chunked paged prefill (all-paged)
+  decode_stage(items)              ONE batched decode step over whatever
+                                   stage-work is resident this iteration —
+                                   per-node continuous batching; items may
+                                   mix requests entering at different layers
+  sample(logits, temperature)      final-stage token sampling
+
+Slot mechanics: caches (and the paged pool's block table) carry
+``max_batch + 1`` rows; the extra row is scratch — decode batches are padded
+to a fixed width with scratch rows so every step hits one compiled program,
+and scratch writes land in cache rows (or page 0) nothing ever reads.
+
+The paged engine's ``PagePool`` is sized from the node's own VRAM with the
+page cost of its *local* paged-layer count, so memory heterogeneity shows up
+as genuinely different pool depths per node.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.placement import LayerRange
+from ..models.paged import all_blocks_paged
+from ..models.stage import (stage_absorb_dense_prefill, stage_cache_init,
+                            stage_cache_init_paged, stage_decode,
+                            stage_decode_paged, stage_num_paged_layers,
+                            stage_params, stage_prefill,
+                            stage_prefill_chunk_paged)
+from .engine import EngineConfig
+from .kv_pool import PagePool, full_rectangle_pages
+from .sampling import sample_token
+
+
+@dataclasses.dataclass
+class DecodeItem:
+    """One request's decode-step input resident at a node this iteration."""
+
+    slot: int
+    pos: int                      # absolute position of the token/activation
+    entry: int                    # request's entry layer at this node
+    token: int = 0                # consumed only when entry == 0
+    h: Optional[np.ndarray] = None  # (1, 1, d) incoming activations
+
+
+@dataclasses.dataclass
+class DecodeOut:
+    h: Optional[np.ndarray]       # (1, 1, d) outgoing activations
+    logits: Optional[np.ndarray]  # (V,) — final stage only
+
+
+class _StageEngineBase:
+    """Slot bookkeeping shared by the dense and paged stage engines."""
+
+    def __init__(self, cfg: ModelConfig, params, layers: LayerRange,
+                 engine_cfg: EngineConfig, rng_seed: int = 0):
+        self.cfg = cfg
+        self.layers = layers
+        self.ec = engine_cfg
+        self.sparams = stage_params(cfg, params, layers)
+        self.is_first = layers.start == 0
+        self.is_last = layers.end == cfg.num_layers
+        self.slots: List[Optional[int]] = [None] * engine_cfg.max_batch
+        self._scratch = engine_cfg.max_batch   # padding row, never allocated
+        self._rng = np.random.RandomState(rng_seed)
+
+    # -- slots ----------------------------------------------------------
+    def alloc_slot(self, request_id: int) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                self.slots[i] = request_id
+                return i
+        return None
+
+    def free_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    @property
+    def free_slots(self) -> int:
+        return sum(r is None for r in self.slots)
+
+    # -- sampling (final stage) -----------------------------------------
+    def sample(self, logits: np.ndarray, temperature: float) -> int:
+        return int(sample_token(logits, temperature, self._rng))
+
+    # -- KV feedback -----------------------------------------------------
+    def kv_tokens_used(self) -> int:
+        raise NotImplementedError
+
+    def kv_tokens_capacity(self) -> int:
+        raise NotImplementedError
+
+    # -- batch assembly ---------------------------------------------------
+    def _assemble(self, items: List[DecodeItem]):
+        B = self.ec.max_batch + 1
+        if not 0 < len(items) <= self.ec.max_batch:
+            raise ValueError(f"{len(items)} decode items for "
+                             f"{self.ec.max_batch} slots")
+        d = self.cfg.d_model
+        idx = np.full((B,), self._scratch, np.int32)
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        entry = np.full((B,), self.layers.end, np.int32)  # pads: all masked
+        h_in = np.zeros((B, 1, d), np.float32)
+        for i, it in enumerate(items):
+            idx[i] = it.slot
+            tok[i] = it.token
+            pos[i] = it.pos
+            entry[i] = it.entry
+            if it.h is not None:
+                h_in[i] = it.h
+        return (jnp.asarray(idx), jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(entry), jnp.asarray(h_in))
+
+    def _emit(self, items: List[DecodeItem], h_out, logits) -> List[DecodeOut]:
+        h_np = np.asarray(h_out)
+        l_np = np.asarray(logits) if logits is not None else None
+        return [DecodeOut(h=h_np[i:i + 1],
+                          logits=l_np[i] if l_np is not None else None)
+                for i in range(len(items))]
+
+
+def _splice(full, one, slot: int):
+    """Copy a batch-1 cache leaf into row ``slot`` of the engine leaf."""
+    return full.at[slot].set(one[0])
+
+
+class StageEngine(_StageEngineBase):
+    """Dense per-slot caches over the node's layer slice."""
+
+    def __init__(self, cfg: ModelConfig, params, layers: LayerRange,
+                 engine_cfg: EngineConfig, rng_seed: int = 0):
+        super().__init__(cfg, params, layers, engine_cfg, rng_seed)
+        ec = engine_cfg
+        self.caches = stage_cache_init(cfg, layers, ec.max_batch + 1,
+                                       ec.max_len)
+        self._prefill = jax.jit(
+            lambda sp, x, entry: stage_prefill(cfg, sp, layers, x, entry,
+                                               max_len=ec.max_len),
+            static_argnums=(2,))
+
+        def decode_fn(sp, caches, tok, h_in, entry, pos, idx):
+            cg = jax.tree.map(lambda c: c[idx], caches)
+            h, logits, nc = stage_decode(cfg, sp, layers, tok, h_in, entry,
+                                         cg, pos)
+            new = jax.tree.map(lambda full, n: full.at[idx].set(n),
+                               caches, nc)
+            return h, logits, new
+
+        self._decode = jax.jit(decode_fn)
+        self._active_tokens = np.zeros((ec.max_batch,), np.int64)
+
+    def prefill_stage(self, slot: int, x, entry: int):
+        """Prompt pass for one request.  x: (S,) int token ids when
+        ``entry == 0`` else (1, S, d) activations.  Returns (1, S, d)
+        activations, or (V,) last-token logits at the final stage."""
+        if entry == 0:
+            S = len(x)
+            xin = jnp.asarray(np.asarray(x, np.int32))[None, :]
+        else:
+            S = x.shape[1]
+            xin = jnp.asarray(x)
+        out, caches1 = self._prefill(self.sparams, xin, entry)
+        self.caches = jax.tree.map(
+            lambda full, one: _splice(full, one, slot), self.caches, caches1)
+        self._active_tokens[slot] = S
+        return np.asarray(out)[0] if self.is_last else np.asarray(out)
+
+    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+        idx, tok, pos, entry, h_in = self._assemble(items)
+        h, logits, self.caches = self._decode(self.sparams, self.caches, tok,
+                                              h_in, entry, pos, idx)
+        for it in items:
+            self._active_tokens[it.slot] = it.pos + 1
+        return self._emit(items, h, logits)
+
+    def release(self, slot: int) -> None:
+        self._active_tokens[slot] = 0
+        self.free_slot(slot)
+
+    def ensure(self, slot: int, tokens: int) -> bool:
+        return tokens <= self.ec.max_len   # rectangle is pre-reserved
+
+    def kv_tokens_used(self) -> int:
+        return int(self._active_tokens.sum())
+
+    def kv_tokens_capacity(self) -> int:
+        return self.ec.max_batch * self.ec.max_len
+
+
+class PagedStageEngine(_StageEngineBase):
+    """Paged-KV stage engine: the node's paged blocks share one ``PagePool``
+    sized from its VRAM; everything else keeps dense fallback caches."""
+
+    def __init__(self, cfg: ModelConfig, params, layers: LayerRange,
+                 engine_cfg: EngineConfig, *, num_pages: Optional[int] = None,
+                 page_size: int = 16, interpret: Optional[bool] = None,
+                 rng_seed: int = 0):
+        super().__init__(cfg, params, layers, engine_cfg, rng_seed)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        ec = engine_cfg
+        self.n_paged = stage_num_paged_layers(cfg, layers)
+        if self.n_paged == 0:
+            raise ValueError(f"slice {layers} of {cfg.name} holds no paged "
+                             "blocks; use the dense StageEngine")
+        self._chunked = all_blocks_paged(cfg)
+        if num_pages is None:
+            num_pages = full_rectangle_pages(cfg, max_batch=ec.max_batch,
+                                             max_len=ec.max_len,
+                                             page_size=page_size,
+                                             paged_layers=self.n_paged)
+        # the scratch slot never allocates, so the pool only needs capacity
+        # for the real max_batch; the extra table column stays on page 0
+        self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
+                             max_batch=ec.max_batch + 1, max_seq_len=ec.max_len,
+                             paged_layers=self.n_paged)
+        self.caches = stage_cache_init_paged(cfg, layers, ec.max_batch + 1,
+                                             ec.max_len)
+        on_cpu = jax.default_backend() == "cpu"
+        if self._chunked:
+            self._prefill_chunk = jax.jit(
+                lambda sp, x, entry, start, kp, vp, tb:
+                stage_prefill_chunk_paged(cfg, sp, layers, x, entry, start,
+                                          kp, vp, tb),
+                static_argnums=(2,),
+                donate_argnums=() if on_cpu else (4, 5))
+        else:
+            self._prefill_one = jax.jit(
+                lambda sp, x, entry: stage_prefill(cfg, sp, layers, x, entry,
+                                                   max_len=ec.max_len),
+                static_argnums=(2,))
+
+        def decode_fn(sp, caches, tok, h_in, entry, pos, idx, kp, vp, tables):
+            cg = jax.tree.map(lambda c: c[idx], caches)
+            tb = tables[:, idx]
+            h, logits, nc, kp, vp = stage_decode_paged(
+                cfg, sp, layers, tok, h_in, entry, cg, pos, kp, vp, tb,
+                interpret=interpret)
+            new = jax.tree.map(lambda full, n: full.at[idx].set(n),
+                               caches, nc)
+            return h, logits, new, kp, vp
+
+        self._decode = jax.jit(decode_fn,
+                               donate_argnums=() if on_cpu else (7, 8))
+
+    # -- pool ------------------------------------------------------------
+    def ensure(self, slot: int, tokens: int) -> bool:
+        return self.pool.ensure(slot, tokens)
+
+    def release(self, slot: int) -> None:
+        self.pool.release(slot)
+        self.free_slot(slot)
+
+    def kv_tokens_used(self) -> int:
+        return self.pool.tokens_used
+
+    def kv_tokens_capacity(self) -> int:
+        return self.pool.tokens_capacity
+
+    # -- prefill ---------------------------------------------------------
+    def prefill_chunk(self, slot: int, x, entry: int, start: int):
+        """One prompt chunk through the slice (all-paged stacks).  x: (C,)
+        tokens or (1, C, d) activations.  Returns chunk activations
+        (1, C, d), or last-token logits (V,) at the final stage."""
+        if entry == 0:
+            xin = jnp.asarray(np.asarray(x, np.int32))[None, :]
+        else:
+            xin = jnp.asarray(x)
+        tb = jnp.asarray(self.pool.table[:, slot:slot + 1])
+        out, self.pool.k, self.pool.v = self._prefill_chunk(
+            self.sparams, xin, entry, jnp.asarray([start], jnp.int32),
+            self.pool.k, self.pool.v, tb)
+        return np.asarray(out)[0] if self.is_last else np.asarray(out)
+
+    def prefill_stage(self, slot: int, x, entry: int):
+        """Single-shot prompt pass (hybrid stacks): dense prefill of the
+        slice, then the paged blocks' K/V is scattered into this slot's
+        pages and the dense fallback caches spliced into the slot."""
+        if self._chunked:
+            raise RuntimeError("all-paged slice: drive prefill_chunk instead")
+        if entry == 0:
+            S = len(x)
+            xin = jnp.asarray(np.asarray(x, np.int32))[None, :]
+        else:
+            S = x.shape[1]
+            xin = jnp.asarray(x)
+        out, caches1 = self._prefill_one(self.sparams, xin, entry)
+        caches1, self.pool.k, self.pool.v = stage_absorb_dense_prefill(
+            self.cfg, self.layers, caches1, self.pool.k, self.pool.v,
+            self.pool.table, slot, S, self.pool.page)
+        self.caches = jax.tree.map(
+            lambda full, one: _splice(full, one, slot), self.caches, caches1)
+        return np.asarray(out)[0] if self.is_last else np.asarray(out)
+
+    # -- decode ----------------------------------------------------------
+    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+        idx, tok, pos, entry, h_in = self._assemble(items)
+        tables = jnp.asarray(self.pool.table)
+        h, logits, self.caches, self.pool.k, self.pool.v = self._decode(
+            self.sparams, self.caches, tok, h_in, entry, pos, idx,
+            self.pool.k, self.pool.v, tables)
+        return self._emit(items, h, logits)
+
+
+def make_stage_engine(cfg: ModelConfig, params, layers: LayerRange,
+                      engine_cfg: EngineConfig, *, paged: bool = True,
+                      **kw) -> _StageEngineBase:
+    if paged:
+        return PagedStageEngine(cfg, params, layers, engine_cfg, **kw)
+    kw.pop("num_pages", None)
+    kw.pop("page_size", None)
+    kw.pop("interpret", None)
+    return StageEngine(cfg, params, layers, engine_cfg, **kw)

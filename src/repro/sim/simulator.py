@@ -47,6 +47,7 @@ class Metrics:
     link_queue_s: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     link_transfers: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=lambda: defaultdict(int))
     restarts: int = 0
+    dropped_requests: int = 0
 
     @property
     def measure_window_s(self) -> float:
@@ -148,7 +149,7 @@ class Simulator:
                  placement: Placement, scheduler: BaseScheduler,
                  *, decode_chunk: int = 4, warmup_s: float = 30.0,
                  horizon_s: float = 600.0, batch_overhead_s: float = 0.015,
-                 kv_output_estimate: int = 256, param_frac: float = 0.5,
+                 kv_output_estimate: int = 256,
                  replan_fn: Optional[Callable] = None,
                  max_decode_tokens: Optional[int] = None):
         self.cluster = cluster
@@ -161,6 +162,7 @@ class Simulator:
         self.kv_output_estimate = kv_output_estimate
         self.replan_fn = replan_fn
         self.max_decode_tokens = max_decode_tokens
+        self.max_schedule_attempts = 20   # 10 s of 0.5 s retries, then drop
 
         self.nodes: Dict[str, NodeSim] = {}
         for name, rng in placement.assignment.items():
@@ -271,13 +273,19 @@ class Simulator:
         self._kick(node)
 
     # -- request lifecycle ----------------------------------------------------
-    def _arrive(self, req: TraceRequest, restarted: int = 0) -> None:
+    def _arrive(self, req: TraceRequest, restarted: int = 0,
+                attempts: int = 0) -> None:
         try:
             pipeline = self.scheduler.schedule(
                 prompt_tokens=req.input_tokens + self.kv_output_estimate)
         except RuntimeError:
-            # no route available (e.g. mid-replan): retry shortly
-            self._push(self._now + 0.5, self._arrive, req, restarted)
+            # no route available (e.g. mid-replan): retry shortly, but cap
+            # like _restart does instead of retrying every 0.5 s forever
+            if attempts >= self.max_schedule_attempts:
+                self.metrics.dropped_requests += 1
+                return
+            self._push(self._now + 0.5, self._arrive, req, restarted,
+                       attempts + 1)
             return
         state = _ReqState(trace=req, pipeline=pipeline, arrival_s=self._now,
                           restarted=restarted, scheduler=self.scheduler)
@@ -324,14 +332,21 @@ class Simulator:
             if state.phase == "prompt":
                 nbytes = state.trace.input_tokens * self.model.activation_bytes
             else:
-                nbytes = self.decode_chunk * self.model.activation_bytes
+                # the final decode chunk may produce fewer tokens than
+                # decode_chunk — charge the actual chunk size, matching
+                # _pass_done's ``produced``
+                produced = min(self.decode_chunk,
+                               state.trace.output_tokens - state.decoded)
+                nbytes = produced * self.model.activation_bytes
             state.stage_idx += 1
             self._transfer(st.node, nxt, nbytes,
                            lambda: self._stage_work(state))
             return
         # pipeline pass complete -> token(s) to coordinator
-        nbytes = self.model.token_bytes * (1 if state.phase == "prompt"
-                                           else self.decode_chunk)
+        nbytes = self.model.token_bytes * (
+            1 if state.phase == "prompt"
+            else min(self.decode_chunk,
+                     state.trace.output_tokens - state.decoded))
         self._transfer(st.node, COORDINATOR, nbytes,
                        lambda: self._pass_done(state))
 

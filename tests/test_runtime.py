@@ -1,0 +1,253 @@
+"""ClusterRuntime tests: multi-stage pipelines over per-node stage engines
+must serve token-for-token identically to a single full-model engine (the
+correctness anchor for the cross-node execution layer), pools must drain on
+completion on every stage node, and preemption / transport delays / partial
+inference / failover must not change outputs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import (COORDINATOR, LayerRange, MILPOptions, ModelProfile,
+                        Placement, plan, replan_after_failure)
+from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
+from repro.core.cluster import _full_mesh_links
+from repro.models import init
+from repro.models.stage import stage_num_paged_layers
+from repro.serving import (ClusterRuntime, Engine, EngineConfig,
+                           InProcessTransport, PagedStageEngine, Request)
+
+
+def f32(cfg):
+    """float32 so paged (Pallas online-softmax) and dense logits agree to
+    argmax precision for greedy equivalence."""
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32")
+
+
+def make_cluster(n):
+    nodes, regions = {}, {COORDINATOR: "r0"}
+    for i in range(n):
+        nodes[f"n{i}"] = NodeSpec(f"n{i}", DEVICE_PROFILES["A100"],
+                                  region="r0")
+        regions[f"n{i}"] = "r0"
+    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3,
+                             10e9 / 8, 1e-3)
+    return ClusterSpec(nodes=nodes, links=links)
+
+
+def make_plan(cfg, assignment):
+    profile = ModelProfile.from_dims(
+        cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
+        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    placement = Placement({n: LayerRange(*r) for n, r in assignment.items()},
+                          cfg.num_layers)
+    assert placement.validate() == []
+    return plan(make_cluster(len(assignment)), profile, placement=placement)
+
+
+EC = EngineConfig(max_batch=4, max_len=48, prompt_len=16)
+
+
+@pytest.fixture(scope="module")
+def gqa_model():
+    cfg = f32(get_smoke_config("smollm_360m"))
+    return cfg, init(cfg, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def reference(gqa_model):
+    """Prompts + greedy outputs from a single full-model dense engine."""
+    cfg, params = gqa_model
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(n,))
+               for n in (10, 5, 16, 12)]
+    eng = Engine(cfg, params, EC)
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(300)
+    assert all(r.done for r in reqs)
+    return prompts, [r.output for r in reqs]
+
+
+def serve(cfg, params, p, prompts, *, paged, new_tokens=6, **kw):
+    rt = ClusterRuntime(cfg, params, p, EC, paged=paged, **kw)
+    reqs = [Request(i, pr, max_new_tokens=new_tokens)
+            for i, pr in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
+    assert all(r.done for r in reqs)
+    return rt, reqs
+
+
+# --- greedy equivalence: the correctness anchor ------------------------------
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_two_stage_matches_single_engine(gqa_model, reference, paged):
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt, reqs = serve(cfg, params, p, prompts, paged=paged)
+    assert [r.output for r in reqs] == ref
+    # each engine holds only its slice
+    assert [len(e.sparams["blocks"]) for _, e in sorted(rt.engines.items())] \
+        == [2, 2]
+    for i in range(len(prompts)):
+        assert len(rt.served[i].stages) == 2
+    if paged:
+        # pool drains to zero on every stage node after completion
+        assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_three_stage_matches_single_engine(gqa_model, reference, paged):
+    """3 uneven stages, with a modelled per-link transport delay — neither
+    the extra hop nor delivery timing may change a single token."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    rt, reqs = serve(cfg, params, p, prompts, paged=paged,
+                     transport=InProcessTransport(default_delay_s=2e-3))
+    assert [r.output for r in reqs] == ref
+    for i in range(len(prompts)):
+        assert len(rt.served[i].stages) == 3
+    if paged:
+        assert all(v == 0 for v in rt.pool_pages_used().values())
+    assert rt._now > 0.0          # the virtual clock actually advanced
+
+
+def test_partial_inference_entry_mid_node(gqa_model, reference):
+    """Replicated placement: a request reaching a node that holds [0, 4) at
+    layer 2 must infer only [2, 4) there (§3.3) — outputs unchanged."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (0, 4), "n2": (2, 4)})
+    # pin the flows so every request routes n0 -> n1: n1 holds [0, 4) but
+    # must start inferring at layer 2 (max-flow might otherwise avoid the
+    # replicated path entirely)
+    p = dataclasses.replace(p, flows={(COORDINATOR, "n0"): 1.0,
+                                      ("n0", "n1"): 1.0,
+                                      ("n1", COORDINATOR): 1.0})
+    rt, reqs = serve(cfg, params, p, prompts, paged=True)
+    assert [r.output for r in reqs] == ref
+    mid_entry = any(
+        st.layers.start > rt.placement.assignment[st.node].start
+        for pipe in rt.served.values() for st in pipe.stages)
+    assert mid_entry, "no pipeline exercised a mid-node entry"
+    assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+def test_pool_exhaustion_preempts_pipeline_wide(gqa_model, reference):
+    """A mid-stage pool that fits one full-budget request forces preemption;
+    recompute-on-readmit must keep outputs identical and drain every pool."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    n_paged = stage_num_paged_layers(cfg, LayerRange(2, 3))
+    small = 1 + (EC.max_len // 16) * n_paged
+    rt, reqs = serve(cfg, params, p, prompts, paged=True,
+                     pool_pages={"n1": small})
+    assert [r.output for r in reqs] == ref
+    assert any(r.preemptions > 0 for r in reqs)
+    assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+def test_hybrid_stack_multi_stage_paged(gqa_model):
+    """Hybrid (mamba/MoE + GQA) slices: paged attention + dense fallback
+    split across stages still matches the full dense engine.  n0's slice
+    holds *no* paged block at all (jamba's attn blocks sit at layers 3 and
+    7) — the runtime must give it a dense stage engine even in paged mode
+    instead of crashing at construction."""
+    cfg = f32(get_smoke_config("jamba_1_5_large_398b"))
+    params = init(cfg, jax.random.key(2))
+    assert stage_num_paged_layers(cfg, LayerRange(0, 3)) == 0
+    prompt = np.random.RandomState(1).randint(0, cfg.vocab_size, size=(11,))
+    ec = EngineConfig(max_batch=2, max_len=48, prompt_len=16)
+    ref_eng = Engine(cfg, params, ec)
+    r1 = Request(0, prompt, max_new_tokens=6)
+    ref_eng.submit(r1)
+    ref_eng.run_until_done(50)
+    p = make_plan(cfg, {"n0": (0, 3), "n1": (3, 5), "n2": (5, 8)})
+    rt = ClusterRuntime(cfg, params, p, ec, paged=True)
+    assert not isinstance(rt.engines["n0"], PagedStageEngine)
+    assert isinstance(rt.engines["n1"], PagedStageEngine)
+    r2 = Request(0, prompt, max_new_tokens=6)
+    rt.submit(r2)
+    rt.run_until_done()
+    assert r2.output == r1.output
+    assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+# --- scheduler feedback ------------------------------------------------------
+
+def test_kv_estimator_sees_true_pool_occupancy(gqa_model):
+    """The runtime must report real PagePool usage (and capacity) into the
+    scheduler's KVEstimator — not arrival-time reservations."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    kv = rt.scheduler.kv
+    for node, eng in rt.engines.items():
+        assert kv.capacity_tokens[node] == eng.pool.tokens_capacity
+    rt.submit(Request(0, np.arange(10) % cfg.vocab_size, max_new_tokens=8))
+    for _ in range(4):
+        rt.step()
+    assert any(eng.pool.tokens_used > 0 for eng in rt.engines.values())
+    for node, eng in rt.engines.items():
+        assert kv.usage[node] == eng.pool.tokens_used
+    rt.run_until_done()
+    for node in rt.engines:
+        assert kv.usage[node] == 0
+
+
+# --- failover ----------------------------------------------------------------
+
+def test_failover_replan_re_prefills_in_flight(gqa_model, reference):
+    """Kill a stage node mid-decode: survivors release the victims' KV, the
+    replanned placement is adopted, in-flight requests re-prefill (keeping
+    generated tokens) and finish with unchanged outputs."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4), "n2": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    reqs = [Request(i, pr, max_new_tokens=6) for i, pr in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r)
+    for _ in range(6):
+        rt.step()
+    assert rt.jobs, "nothing in flight before the failure"
+    rt.fail_node("n1")
+    new = replan_after_failure(p, "n1", MILPOptions(time_limit_s=5.0,
+                                                    lns_rounds=0,
+                                                    fgls_rounds=10))
+    rt.apply_plan(new)
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref
+    assert "n1" not in rt.engines
+    assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+# --- guards ------------------------------------------------------------------
+
+def test_runtime_rejects_oversized_prompt(gqa_model):
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    with pytest.raises(ValueError, match="truncate"):
+        rt.submit(Request(0, np.arange(EC.max_len + 1) % cfg.vocab_size))
+    with pytest.raises(ValueError, match="empty"):
+        rt.submit(Request(1, np.zeros((0,), np.int32)))
+
+
+def test_stage_engine_holds_only_its_slice(gqa_model):
+    cfg, params = gqa_model
+    eng = PagedStageEngine(cfg, params, LayerRange(1, 3), EC)
+    assert len(eng.sparams["blocks"]) == 2
+    assert "embed" not in eng.sparams       # neither first nor last stage
+    assert "final_norm" not in eng.sparams
+    assert eng.pool.num_layers == 2         # pool priced at *local* layers

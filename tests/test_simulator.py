@@ -47,6 +47,22 @@ def test_trace_statistics():
     assert max(ins) <= 2048 and max(outs) <= 1024
 
 
+def test_unroutable_requests_dropped_not_retried_forever():
+    """Regression: _arrive used to retry a failed schedule() every 0.5 s
+    forever; it must cap retries (like _restart) and count the drops."""
+    from repro.core import MILPOptions, plan as _plan
+    cluster = make_cluster(("A100", "A100"))
+    model = small_model(4)
+    p = _plan(cluster, model, MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    sched = p.make_scheduler()
+    sched.update_weights({})          # no routes: every schedule() fails
+    sim = Simulator(cluster, model, p.placement, sched, warmup_s=0.0,
+                    horizon_s=600.0)
+    m = sim.run(make_offline_trace(5, seed=1))
+    assert m.dropped_requests == 5
+    assert m.completed_requests == 0
+
+
 def test_simulator_produces_tokens():
     _, sim, m = run_sim()
     assert m.decoded_tokens > 0
