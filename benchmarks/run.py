@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig12a+tab4  cluster-pruning ablation
   fig12b   warm-start ablation
   fault_*  beyond-paper fault tolerance (failover, straggler)
+  pipelined_decode  in-flight decode window depth 1 vs 2 (latency)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
 """
@@ -29,11 +30,13 @@ def _register():
     from .scheduling_tables import bench_scheduling_deepdive
     from .serving_tables import (bench_distributed_cluster,
                                  bench_high_heterogeneity,
+                                 bench_pipelined_decode,
                                  bench_single_cluster)
     BENCHES.update({
         "fig6_single_cluster": bench_single_cluster,
         "fig8_distributed": bench_distributed_cluster,
         "fig9e_heterogeneity": bench_high_heterogeneity,
+        "pipelined_decode": bench_pipelined_decode,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

@@ -72,6 +72,42 @@ def bench_distributed_cluster(quick: bool = False):
     return out
 
 
+def bench_pipelined_decode(quick: bool = False):
+    """In-flight decode window: depth 1 vs 2 on a 3xA100 full mesh with
+    50 ms links — LLaMA-30B forces a real 3-stage pipeline, so depth 2's
+    final-stage launch turns the (k+1)·d per-token path into k·d.  Light
+    online load and decode_chunk=1 so the per-request serial path (not
+    queueing or chunk amortization) is what's measured."""
+    import time
+
+    from repro.core import MILPOptions, full_mesh_cluster, plan
+    from repro.sim import Simulator, make_trace
+
+    cluster = full_mesh_cluster(3, bandwidth=1e9 / 8, latency_s=50e-3)
+    p = plan(cluster, LLAMA_30B, MILPOptions(time_limit_s=15.0,
+                                             lns_rounds=0))
+    n = 60 if quick else 150
+    trace = make_trace(n, arrival_rate_per_s=1.0, seed=0)
+    rows = {}
+    for depth in (1, 2):
+        t0 = time.time()
+        sim = Simulator(cluster, LLAMA_30B, p.placement, p.make_scheduler(),
+                        warmup_s=5.0, horizon_s=600.0, decode_chunk=1,
+                        max_inflight=depth)
+        m = sim.run(list(trace))
+        rows[depth] = m
+        wall = time.time() - t0
+        emit(f"pipelined_llama-30b_3stage_depth{depth}_decode_lat_s",
+             wall, f"{m.decode_latency['mean']:.3f}")
+        emit(f"pipelined_llama-30b_3stage_depth{depth}_decode_tps",
+             wall, f"{m.decode_throughput:.1f}")
+    ratio = rows[1].decode_latency["mean"] / max(
+        rows[2].decode_latency["mean"], 1e-9)
+    emit("pipelined_llama-30b_depth1_vs_depth2_lat_ratio", 0.0,
+         f"{ratio:.2f}")
+    return rows
+
+
 def bench_high_heterogeneity(quick: bool = False):
     """Fig. 9e (42 nodes, 7 types, LLaMA-70B offline)."""
     cluster = make_high_heterogeneity_cluster()

@@ -40,6 +40,10 @@ def main() -> None:
                     help="derate VRAM so placements need >= N stages")
     ap.add_argument("--delay-ms", type=float, default=0.0,
                     help="modelled inter-stage transport delay")
+    ap.add_argument("--max-inflight", type=int, default=1,
+                    help="per-request in-flight decode window: >= 2 lets "
+                         "the final stage launch token t+1 while token t "
+                         "travels back to the coordinator")
     ap.add_argument("--check", action="store_true",
                     help="verify token-for-token against one full engine")
     args = ap.parse_args()
@@ -66,7 +70,8 @@ def main() -> None:
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
     transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
     rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
-                        transport=transport)
+                        transport=transport,
+                        max_inflight=args.max_inflight)
     if not args.dense:
         for node, eng in sorted(rt.engines.items()):
             print(f"  {node}: pool {eng.pool.num_pages} pages")
@@ -93,6 +98,10 @@ def main() -> None:
     toks = sum(len(r.output) for r in reqs)
     print(f"\nserved {done}/{len(reqs)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks / dt:.1f} tok/s on CPU)")
+    if args.delay_ms > 0:
+        print(f"mean decode latency (virtual clock, in-flight window "
+              f"{args.max_inflight}): {rt.mean_decode_latency() * 1e3:.2f}ms"
+              f"/token")
     for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.output}")
     assert done == len(reqs), "not all requests completed"

@@ -1,7 +1,7 @@
 """Helix core: max-flow/MILP placement + per-request pipeline scheduling."""
 from .cluster import (COORDINATOR, DEVICE_PROFILES, LLAMA_30B, LLAMA_70B,
                       ClusterSpec, DeviceProfile, LinkSpec, ModelProfile,
-                      NodeSpec, make_distributed_cluster,
+                      NodeSpec, full_mesh_cluster, make_distributed_cluster,
                       make_high_heterogeneity_cluster, make_serving_cluster,
                       make_single_cluster, make_tpu_pod_cluster)
 from .graph import (ClusterGraph, build_graph, compute_upper_bound,

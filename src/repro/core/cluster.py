@@ -234,6 +234,24 @@ def _full_mesh_links(names: Sequence[str], regions: Mapping[str, str],
     return links
 
 
+def full_mesh_cluster(devs, *, bandwidth: float = 10e9 / 8,
+                      latency_s: float = 1e-3) -> ClusterSpec:
+    """Single-region full-mesh cluster over named device types — or an int
+    for that many A100s.  The builder the tests, their harness, and the
+    benchmarks share for controlled-topology experiments."""
+    if isinstance(devs, int):
+        devs = ["A100"] * devs
+    nodes: Dict[str, NodeSpec] = {}
+    regions = {COORDINATOR: "r0"}
+    for i, d in enumerate(devs):
+        name = f"n{i}"
+        nodes[name] = NodeSpec(name, DEVICE_PROFILES[d], region="r0")
+        regions[name] = "r0"
+    links = _full_mesh_links(list(nodes), regions, bandwidth, latency_s,
+                             bandwidth, latency_s)
+    return ClusterSpec(nodes=nodes, links=links)
+
+
 def make_serving_cluster(profile: ModelProfile,
                          devs: Sequence[str] = ("A100", "L4", "T4"),
                          force_stages: int = 0,

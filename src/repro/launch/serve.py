@@ -84,7 +84,8 @@ def run_cluster(cfg, args) -> None:
     ec = EngineConfig(max_batch=args.batch, max_len=args.max_len,
                       prompt_len=min(16, args.max_len))
     rt = ClusterRuntime(cfg, params, p, ec, paged=args.paged or not args.dense,
-                        page_size=args.page_size)
+                        page_size=args.page_size,
+                        max_inflight=args.max_inflight)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
                     max_new_tokens=args.new_tokens)
@@ -125,6 +126,9 @@ def main() -> None:
                          "cluster through the ClusterRuntime")
     ap.add_argument("--stages", type=int, default=0,
                     help="with --cluster: derate VRAM to force >= N stages")
+    ap.add_argument("--max-inflight", type=int, default=1,
+                    help="with --cluster: per-request in-flight decode "
+                         "window (pipelined decode at >= 2)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -143,6 +143,15 @@ class _EngineBase:
             if not self.queue and not self.active.any():
                 return
             self.step()
+        if not self.queue and not self.active.any():
+            return                   # finished exactly on the last step
+        # never return silently with work outstanding (requests would just
+        # look hung); mirror ClusterRuntime.run_until_done
+        seated = [r.request_id for r in self.slots if r is not None]
+        raise RuntimeError(
+            f"not done after {max_iters} iterations; "
+            f"queued={len(self.queue)} active={int(self.active.sum())} "
+            f"active_requests={seated}")
 
 
 class Engine(_EngineBase):

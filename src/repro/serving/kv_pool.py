@@ -118,7 +118,13 @@ class PagePool:
     def ensure(self, slot: int, tokens: int) -> bool:
         """Grow ``slot``'s allocation to hold ``tokens``.  Returns False if
         the pool is currently exhausted (caller blocks or preempts); raises
-        PoolExhausted if ``tokens`` exceeds the per-sequence budget."""
+        PoolExhausted if ``tokens`` exceeds the per-sequence budget.
+
+        Doubles as the in-flight reservation primitive: the ClusterRuntime
+        calls it on every stage node when it *launches* a decode pass, so by
+        the time the token reaches a mid-pipeline node its block is already
+        held — allocated blocks can only be taken back by release or
+        preemption, never by another request's growth."""
         target = -(-tokens // self.page)
         if target > self.blocks_per_seq:
             raise PoolExhausted(

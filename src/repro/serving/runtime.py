@@ -9,10 +9,27 @@ any request, entering at any layer) is resident each iteration.
 
 Event loop: a virtual-clock heap of deliveries.  Prefill hops execute inline
 as they arrive (per-request; chunked across stages for all-paged stacks);
-decode inputs accumulate in per-node inboxes and run as ONE batched
-``decode_stage`` per node per iteration — per-node continuous batching.  The
-final stage samples the token and ships it to the coordinator, which starts
-the next decode pass (one outstanding token per request, as in the paper).
+decode inputs accumulate in per-node inboxes and run as batched
+``decode_stage`` calls per node per iteration — per-node continuous batching.
+
+Pipelined decode (the steady state the paper's max-flow bound §4 assumes):
+each request carries an in-flight window of up to ``max_inflight`` decode
+passes that are launched but not yet confirmed by the coordinator.  After
+sampling token t, the *final stage* speculatively launches the pass for
+token t+1 straight to stage 0 — one hop instead of the two-hop
+final->coordinator->stage-0 round trip — while token t travels back.  The
+coordinator confirms tokens strictly in order (out-of-order arrivals are
+buffered per request), applies the stop rules (eos / max_new_tokens /
+max_len), and cancels any speculative in-flight passes on completion,
+preemption, or failover by bumping the job epoch, which every in-flight
+delivery checks.  Launching reserves KV for the new position on *every*
+stage node up front, so a mid-pipeline token never lands on an exhausted
+pool.  Decode stays autoregressive: pass t+1 exists only once pass t left
+the final stage, so a single pass per request is ever inside the stages and
+token t+1 always attends to token t's cache write (the stage engine rejects
+duplicate-slot batches as the invariant check).  ``max_inflight=1``
+degenerates to the classic one-outstanding-token walk (final stage waits
+for the coordinator).
 
 Memory: admission takes a slot (and, paged, the prompt's pages) on *every*
 stage node up front; completion and preemption release KV on every node of
@@ -108,13 +125,26 @@ class _Job:
     req: Request
     pipe: Any = None                 # RequestPipeline (kept across preemption)
     slots: Dict[str, int] = dataclasses.field(default_factory=dict)
-    pos: int = 0                     # tokens resident in caches
-    epoch: int = 0                   # bumped on preempt/requeue: stale msgs die
+    pos: int = 0                     # tokens confirmed resident in caches
+    epoch: int = 0                   # bumped on preempt/requeue/complete:
+                                     # stale in-flight messages die
     seq: int = -1                    # admission order (preemption victims)
+    # -- in-flight decode window (reset on every (re)admission) ----------
+    next_j: int = 0                  # output index the next launched pass
+                                     # will produce
+    next_pos: int = 0                # cache position of the next pass
+    inbox: Dict[int, int] = dataclasses.field(default_factory=dict)
+                                     # out-of-order sampled tokens by index
 
     @property
     def resumed(self) -> bool:
         return bool(self.req.output)
+
+    @property
+    def inflight(self) -> int:
+        """Decode passes launched whose token the coordinator has not yet
+        confirmed (includes sampled tokens still travelling back)."""
+        return self.next_j - len(self.req.output)
 
 
 class ClusterRuntime:
@@ -129,11 +159,15 @@ class ClusterRuntime:
                  *, paged: bool = True, page_size: int = 16,
                  pool_pages: Optional[Mapping[str, int]] = None,
                  transport: Optional[Transport] = None,
-                 interpret: Optional[bool] = None, rng_seed: int = 0):
+                 interpret: Optional[bool] = None, rng_seed: int = 0,
+                 max_inflight: int = 1):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cfg = cfg
         self.params = params
         self.ec = engine_cfg
         self.paged = paged
+        self.max_inflight = max_inflight
         self.page_size = page_size
         self.pool_pages = dict(pool_pages or {})
         self.interpret = interpret
@@ -163,9 +197,15 @@ class ClusterRuntime:
         self._now = 0.0
         self.tokens_produced = 0
         self.completed = 0
+        # speculative in-flight passes cancelled by an early stop (eos/len)
+        self.cancelled_inflight = 0
         # request_id -> the pipeline it was (last) served on, for
         # introspection: drivers assert multi-stage serving actually happened
         self.served: Dict[int, Any] = {}
+        # virtual-clock latency: first-token confirm time, and mean
+        # per-token decode latency recorded at completion
+        self._vfirst: Dict[int, float] = {}
+        self.decode_latencies: Dict[int, float] = {}
 
     # -- engine construction ------------------------------------------------
     def _make_engine(self, node: str, rng: LayerRange):
@@ -226,8 +266,22 @@ class ClusterRuntime:
             if not self.step():
                 raise RuntimeError(
                     "runtime stalled: queued requests cannot be admitted "
-                    "(cluster slots/pools too small?)")
-        raise RuntimeError(f"not done after {max_iters} iterations")
+                    "(cluster slots/pools too small?); " + self._state())
+        if not (self.queue or self.jobs or self._events or self._ready):
+            return                   # finished exactly on the last step
+        raise RuntimeError(
+            f"not done after {max_iters} iterations; " + self._state())
+
+    def _state(self) -> str:
+        """Queue / in-flight diagnostics for stall and iteration-budget
+        errors — never return silently with work outstanding."""
+        windows = {j.req.request_id: f"{len(j.req.output)}+{j.inflight}"
+                   for j in self.jobs.values()}
+        ready = {n: len(v) for n, v in self._ready.items() if v}
+        return (f"queued={len(self.queue)} "
+                f"in_flight(confirmed+window)={windows} "
+                f"pending_events={len(self._events)} ready={ready} "
+                f"now={self._now:.6f}")
 
     def step(self) -> bool:
         """One runtime iteration: admit, drain deliveries due now, then one
@@ -243,9 +297,8 @@ class ClusterRuntime:
         for node in [n for n, v in self._ready.items() if v]:
             work = self._ready.pop(node)
             work = [w for w in work if w["job"].epoch == w["epoch"]]
-            while work:
-                self._decode_node(node, work[:self.ec.max_batch])
-                work = work[self.ec.max_batch:]
+            if work:
+                self._decode_node(node, work)
                 progressed = True
         self._sync_kv()
         return progressed
@@ -300,6 +353,14 @@ class ClusterRuntime:
             self.queue.popleft()
             job.slots = dict(taken)
             job.pos = S
+            # open the in-flight window: the first decode pass consumes the
+            # last known token at position S and produces output index
+            # ``next_j`` (a fresh request's prefill token is index 0, so its
+            # first decode pass produces index 1; a resumed request restarts
+            # from its last confirmed token)
+            job.next_j = len(job.req.output) if job.resumed else 1
+            job.next_pos = S
+            job.inbox = {}
             job.seq = self._jseq
             self._jseq += 1
             self.jobs[job.req.request_id] = job
@@ -361,87 +422,172 @@ class ClusterRuntime:
             else:
                 tok = eng.sample(out, job.req.temperature)
             self._send(st.node, COORDINATOR, tok, self.profile.token_bytes,
-                       lambda t: self._on_token(job, epoch, t, first=True))
+                       lambda t: self._on_first_token(job, epoch, t))
+            # at depth >= 2 decode starts here — the first pass leaves for
+            # stage 0 while the prefill token travels to the coordinator.
+            # Depth 1 always waits for the coordinator (also for resumed
+            # requests, whose token needs no confirmation): the documented
+            # classic walk, so depth-1 latency is comparable on any trace.
+            if self.max_inflight > 1:
+                self._maybe_launch(job, st.node, int(tok), job.next_j)
 
     # -- token arrivals (coordinator) ----------------------------------------
-    def _on_token(self, job: _Job, epoch: int, tok: int, first: bool) -> None:
+    def _stop_reason(self, job: _Job) -> Optional[str]:
+        req = job.req
+        if int(req.output[-1]) == self.ec.eos_token:
+            return "stop"
+        if len(req.output) >= req.max_new_tokens:
+            return "length"
+        if job.pos >= self.ec.max_len:
+            return "length"
+        return None
+
+    def _on_first_token(self, job: _Job, epoch: int, tok: int) -> None:
+        """Prefill's token reached the coordinator (resumed requests re-send
+        their last confirmed token instead of sampling a new one)."""
         if job.epoch != epoch:
             return
         req = job.req
-        reason = None
-        if first:
-            if not job.resumed:
-                req.output.append(int(tok))
-                req.first_token_s = time.time()
-                self.tokens_produced += 1
-                if int(tok) == self.ec.eos_token:
-                    reason = "stop"
-                elif req.max_new_tokens <= 1:
-                    reason = "length"
-                elif job.pos >= self.ec.max_len:
-                    reason = "length"
-        else:
+        if not job.resumed:
             req.output.append(int(tok))
+            req.first_token_s = time.time()
+            self._vfirst[req.request_id] = self._now
+            self.tokens_produced += 1
+            reason = self._stop_reason(job)
+            if reason is not None:
+                self._complete(job, reason)
+                return
+        # depth 1 (or a closed window at prefill time): the first decode
+        # pass launches from here, exactly the classic walk.  The expected
+        # index is the one consuming our newest confirmed token — if the
+        # final stage already launched it, this is a no-op.
+        self._maybe_launch(job, COORDINATOR, int(req.output[-1]),
+                           len(req.output))
+        # a reordering transport may have delivered decode tokens first
+        self._drain_inbox(job)
+
+    def _on_decode_token(self, job: _Job, epoch: int, j: int, tok: int
+                         ) -> None:
+        """A sampled token arrived.  Confirm strictly in output order —
+        arrivals ahead of the expected index wait in the job's inbox."""
+        if job.epoch != epoch:
+            return
+        job.inbox[j] = int(tok)
+        self._drain_inbox(job)
+
+    def _drain_inbox(self, job: _Job) -> None:
+        req = job.req
+        while len(req.output) in job.inbox:
+            t = job.inbox.pop(len(req.output))
+            req.output.append(t)
             self.tokens_produced += 1
             job.pos += 1
-            if int(tok) == self.ec.eos_token:
-                reason = "stop"
-            elif len(req.output) >= req.max_new_tokens:
-                reason = "length"
-            elif job.pos >= self.ec.max_len:
-                reason = "length"
-        if reason is not None:
-            self._complete(job, reason)
-            return
-        self._dispatch_decode(job)
+            reason = self._stop_reason(job)
+            if reason is not None:
+                self._complete(job, reason)
+                return
+            self._maybe_launch(job, COORDINATOR, t, len(req.output))
 
-    def _dispatch_decode(self, job: _Job) -> None:
+    # -- decode pass launch (window) -----------------------------------------
+    def _maybe_launch(self, job: _Job, src: str, tok: int, expect_j: int
+                      ) -> None:
+        """Launch the decode pass producing output index ``expect_j`` if no
+        one else has (the final stage races the coordinator for it), the
+        hard budgets allow it to ever be confirmed, and the in-flight window
+        has room.  Sampled-token speculation (eos still unseen by the
+        coordinator) launches anyway — completion cancels it by epoch."""
+        req = job.req
+        if req.done or job.next_j != expect_j:
+            return
+        if job.next_j >= req.max_new_tokens or job.next_pos >= self.ec.max_len:
+            return                   # pass could never be confirmed
+        if job.inflight >= self.max_inflight:
+            return                   # window full: coordinator relaunches
+        pos, j, epoch = job.next_pos, job.next_j, job.epoch
+        if not self._reserve_inflight(job, pos + 1):
+            return                   # job itself was preempted reserving
+        job.next_j = j + 1
+        job.next_pos = pos + 1
         first = job.pipe.stages[0].node
+        self._send(src, first, int(tok), self.profile.token_bytes,
+                   lambda t, e=epoch, p=pos, jj=j:
+                   self._ready[first].append(
+                       dict(job=job, epoch=e, si=0, tok=int(t), h=None,
+                            pos=p, j=jj)))
+
+    def _grow_or_preempt(self, eng, node: str, job: _Job, tokens: int
+                         ) -> bool:
+        """Grow ``job``'s KV on ``node`` to hold ``tokens``, preempting the
+        newest resident request (pipeline-wide) while the pool is dry.
+        Returns False when the victim chain reached ``job`` itself."""
         epoch = job.epoch
-        tok = job.req.output[-1]
-        self._send(COORDINATOR, first, tok, self.profile.token_bytes,
-                   lambda t: self._ready[first].append(
-                       dict(job=job, epoch=epoch, si=0, tok=int(t), h=None)))
+        while not eng.ensure(job.slots[node], tokens):
+            live = [j for j in self.jobs.values() if node in j.slots]
+            victim = max(live, key=lambda j: j.seq)
+            self._preempt(victim)
+            if job.epoch != epoch:
+                return False
+        return True
+
+    def _reserve_inflight(self, job: _Job, tokens: int) -> bool:
+        """Reserve KV for an in-flight token on every stage node *at launch*
+        so it can never land mid-pipeline on an exhausted pool; returns
+        False when the job itself got preempted making room."""
+        for st in job.pipe.stages:
+            eng = self.engines.get(st.node)
+            if eng is None or st.node not in job.slots:
+                return False         # mid-failover: the job will requeue
+            if not self._grow_or_preempt(eng, st.node, job, tokens):
+                return False
+        return True
 
     # -- decode (per-node continuous batching) -------------------------------
     def _decode_node(self, node: str, work: List[dict]) -> None:
+        """All stage-work resident at ``node`` this iteration.  At most one
+        decode pass per request is ever inside the stages (pass t+1 is born
+        at the final stage only after pass t exits it), so ``work`` holds at
+        most one item per request — ``stage_engine._assemble`` rejects
+        duplicate cache slots if that invariant is ever broken."""
         eng = self.engines.get(node)
         if eng is None:
             return
-        # grow pools oldest-first; preempt the newest resident request
-        # (pipeline-wide) when this node's pool runs dry
+        # grow pools oldest-first, as a backstop: launch-time reservation
+        # makes this a cheap no-op unless another request raced the pool dry
         for w in sorted(work, key=lambda w: w["job"].seq):
             job = w["job"]
             if job.epoch != w["epoch"]:
                 continue
-            while not eng.ensure(job.slots[node], job.pos + 1):
-                live = [j for j in self.jobs.values() if node in j.slots]
-                victim = max(live, key=lambda j: j.seq)
-                self._preempt(victim)
-                if victim is job:
-                    break
-        work = [w for w in work if w["job"].epoch == w["epoch"]]
-        if not work:
-            return
-        items = [DecodeItem(slot=w["job"].slots[node], pos=w["job"].pos,
-                            entry=w["job"].pipe.stages[w["si"]].layers.start,
-                            token=w["tok"], h=w["h"]) for w in work]
-        outs = eng.decode_stage(items)
-        for w, out in zip(work, outs):
-            job = w["job"]
-            si = w["si"]
-            epoch = w["epoch"]
-            if si == len(job.pipe.stages) - 1:
-                tok = eng.sample(out.logits, job.req.temperature)
-                self._send(node, COORDINATOR, tok, self.profile.token_bytes,
-                           lambda t, j=job, e=epoch:
-                           self._on_token(j, e, t, first=False))
-            else:
-                nxt = job.pipe.stages[si + 1].node
-                self._send(node, nxt, out.h, self._act_bytes(1),
-                           lambda h, j=job, e=epoch, s=si + 1, n=nxt:
-                           self._ready[n].append(
-                               dict(job=j, epoch=e, si=s, tok=0, h=h)))
+            self._grow_or_preempt(eng, node, job, w["pos"] + 1)
+        while work:
+            batch = [w for w in work[:self.ec.max_batch]
+                     if w["job"].epoch == w["epoch"]]
+            work = work[self.ec.max_batch:]
+            if not batch:
+                continue
+            items = [DecodeItem(slot=w["job"].slots[node], pos=w["pos"],
+                                entry=w["job"].pipe.stages[w["si"]]
+                                .layers.start,
+                                token=w["tok"], h=w["h"]) for w in batch]
+            outs = eng.decode_stage(items)
+            for w, out in zip(batch, outs):
+                job, si, epoch, j = w["job"], w["si"], w["epoch"], w["j"]
+                if si == len(job.pipe.stages) - 1:
+                    tok = eng.sample(out.logits, job.req.temperature)
+                    self._send(node, COORDINATOR, (j, tok),
+                               self.profile.token_bytes,
+                               lambda p, jb=job, e=epoch:
+                               self._on_decode_token(jb, e, p[0], p[1]))
+                    # speculative: token j leaves for the coordinator while
+                    # the pass for j+1 leaves for stage 0
+                    self._maybe_launch(job, node, tok, j + 1)
+                else:
+                    nxt = job.pipe.stages[si + 1].node
+                    self._send(node, nxt, out.h, self._act_bytes(1),
+                               lambda h, jb=job, e=epoch, s=si + 1, n=nxt,
+                               p=w["pos"], jj=j:
+                               self._ready[n].append(
+                                   dict(job=jb, epoch=e, si=s, tok=0, h=h,
+                                        pos=p, j=jj)))
 
     # -- completion / preemption ---------------------------------------------
     def _release_all(self, job: _Job) -> None:
@@ -456,6 +602,16 @@ class ClusterRuntime:
         req.done = True
         req.finish_reason = reason
         req.finished_s = time.time()
+        # cancel speculative in-flight passes (a stop confirmed while token
+        # t+1 is mid-pipeline): the epoch bump kills their deliveries; KV
+        # they reserved is released with the slots below
+        self.cancelled_inflight += max(0, job.inflight)
+        job.epoch += 1
+        job.inbox = {}
+        t0 = self._vfirst.pop(req.request_id, None)
+        if t0 is not None and len(req.output) > 1:
+            self.decode_latencies[req.request_id] = \
+                (self._now - t0) / (len(req.output) - 1)
         self._release_all(job)
         self.jobs.pop(req.request_id, None)
         self.completed += 1
@@ -478,7 +634,8 @@ class ClusterRuntime:
                 job.pipe = None
 
     def _requeue(self, job: _Job, clear_pipe: bool) -> None:
-        job.epoch += 1
+        job.epoch += 1               # cancels every in-flight pass
+        job.inbox = {}
         self._release_all(job)
         if clear_pipe:
             job.pipe = None
@@ -526,3 +683,10 @@ class ClusterRuntime:
     def pool_pages_used(self) -> Dict[str, int]:
         return {n: e.pool.used for n, e in self.engines.items()
                 if isinstance(e, PagedStageEngine)}
+
+    def mean_decode_latency(self) -> float:
+        """Mean per-token decode latency on the virtual clock, over
+        completed requests that decoded at least one token past prefill —
+        the number the in-flight window is meant to shrink."""
+        lats = list(self.decode_latencies.values())
+        return sum(lats) / len(lats) if lats else 0.0

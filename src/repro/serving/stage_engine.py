@@ -112,6 +112,18 @@ class _StageEngineBase:
         if not 0 < len(items) <= self.ec.max_batch:
             raise ValueError(f"{len(items)} decode items for "
                              f"{self.ec.max_batch} slots")
+        # one batched step gathers/scatters each cache row once, so a batch
+        # holding tokens t and t+1 of one request would lose t's KV write.
+        # The runtime upholds this by construction (pass t+1 is only born
+        # when pass t exits the final stage, so one pass per request is in
+        # the stages at a time); this guard is the invariant check — true
+        # multi-token speculation would need position-ordered sub-batches.
+        slots = [it.slot for it in items]
+        if len(set(slots)) != len(slots):
+            raise ValueError(
+                "duplicate cache slot in one decode batch: in-flight tokens "
+                "of a request must decode in separate, position-ordered "
+                f"batches (slots={slots})")
         d = self.cfg.d_model
         idx = np.full((B,), self._scratch, np.int32)
         tok = np.zeros((B,), np.int32)

@@ -12,6 +12,13 @@ Entities:
     from a scheduler → prompt pass through stages → autoregressive decode
     passes (chunked by ``decode_chunk`` for speed) → completion.
 
+Pipelined decode mirrors the ClusterRuntime's in-flight window: each pass
+is its own ``_Pass`` walking the stages, and with ``max_inflight`` >= 2 the
+final stage launches the next chunk straight back to stage 0 while the
+produced tokens travel to the coordinator — so the simulator and the real
+runtime model the same overlap and stay comparable.  ``max_inflight=1``
+(default) reproduces the classic one-outstanding-pass walk exactly.
+
 Fault-tolerance hooks: ``fail_node(t, name)`` kills a node mid-run (in-flight
 requests restart on a replanned placement), ``slow_node(t, name, factor)``
 injects a straggler; both exercise the planner's elastic replanning.
@@ -100,8 +107,9 @@ class NodeSim:
         self.batch_token_cap = batch_token_cap
         self.batch_overhead_s = batch_overhead_s
         self.offload_penalty = offload_penalty
-        self.pending: deque = deque()   # (work_units, kv_grow, callback)
-        self.kv_wait: deque = deque()   # (work_units, kv_need, kv_grow, callback)
+        self.pending: deque = deque()   # (work_units, done_cb, pass)
+        self.kv_wait: deque = deque()   # (work_units, kv_need, kv_grow,
+                                        #  done_cb, pass)
         self.busy_until = 0.0
         self.alive = True
         self.speed_factor = 1.0
@@ -131,9 +139,11 @@ class _ReqState:
     trace: TraceRequest
     pipeline: RequestPipeline
     arrival_s: float
-    phase: str = "prompt"            # prompt | decode
-    stage_idx: int = 0
-    decoded: int = 0                 # output tokens completed
+    decoded: int = 0                 # output tokens confirmed at coordinator
+    launched: int = 0                # output tokens covered by passes so far
+    inflight: int = 0                # passes launched, not yet confirmed
+    in_pipeline: bool = False        # a pass is inside the stages right now
+    epoch: int = 0                   # bumped on restart: stale passes die
     first_token_s: Optional[float] = None
     restarted: int = 0
     # the scheduler that reserved this request's pipeline — reservations
@@ -144,6 +154,19 @@ class _ReqState:
     kv_charged: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class _Pass:
+    """One pipeline pass (the prompt, or one decode chunk) in flight.  With
+    ``max_inflight`` >= 2 several passes of one request walk the stages
+    concurrently, each carrying its own stage cursor."""
+    state: _ReqState
+    chunk: int                       # output tokens this pass produces
+    start: int                       # output-token offset the chunk covers
+    stage_idx: int = 0
+    is_prompt: bool = False
+    epoch: int = 0
+
+
 class Simulator:
     def __init__(self, cluster: ClusterSpec, model: ModelProfile,
                  placement: Placement, scheduler: BaseScheduler,
@@ -151,7 +174,11 @@ class Simulator:
                  horizon_s: float = 600.0, batch_overhead_s: float = 0.015,
                  kv_output_estimate: int = 256,
                  replan_fn: Optional[Callable] = None,
-                 max_decode_tokens: Optional[int] = None):
+                 max_decode_tokens: Optional[int] = None,
+                 max_inflight: int = 1):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = max_inflight
         self.cluster = cluster
         self.model = model
         self.placement = placement
@@ -214,25 +241,49 @@ class Simulator:
                 state.kv_charged.get(ns.name, 0.0) + amount
 
     def _release_kv(self, state: "_ReqState") -> None:
-        """Return every byte-token this request charged, exactly."""
+        """Return every byte-token this request charged, exactly — then wake
+        kv-waiters on those nodes.  Without the wakeup, a request whose
+        completion freed the capacity a waiter needs would strand it forever
+        when no other batch ever lands on that node."""
+        touched = list(state.kv_charged)
         for node, amt in state.kv_charged.items():
             ns = self.nodes.get(node)
             if ns is not None:
                 ns.kv_used = max(0.0, ns.kv_used - amt)
         state.kv_charged.clear()
+        for node in touched:
+            self._admit_waiters(node)
+
+    def _admit_waiters(self, node: str) -> None:
+        """Admit kv-waiters (front-of-queue order) whose reservation now
+        fits, dropping waiters whose request restarted while queued —
+        charging those would leak KV the restart's release already cleared."""
+        ns = self.nodes.get(node)
+        if ns is None or not ns.alive:
+            return
+        while ns.kv_wait:
+            w, need, grow, cb, p = ns.kv_wait[0]
+            if p.epoch != p.state.epoch:
+                ns.kv_wait.popleft()
+                continue
+            if ns.kv_used + need > ns.kv_capacity:
+                break
+            ns.kv_wait.popleft()
+            self._charge_kv(ns, p.state, need + grow)
+            ns.pending.append((w, cb, p))
+        self._kick(node)
 
     def _enqueue_work(self, node: str, work_units: float, kv_need: float,
-                      kv_grow: float, done: Callable,
-                      state: "_ReqState") -> None:
+                      kv_grow: float, done: Callable, p: "_Pass") -> None:
         ns = self.nodes[node]
         if not ns.alive:
-            self._restart(state)
+            self._restart_pass(p)
             return
         if kv_need > 0 and ns.kv_used + kv_need > ns.kv_capacity:
-            ns.kv_wait.append((work_units, kv_need, kv_grow, done, state))
+            ns.kv_wait.append((work_units, kv_need, kv_grow, done, p))
             return
-        self._charge_kv(ns, state, kv_need + kv_grow)
-        ns.pending.append((work_units, done, state))
+        self._charge_kv(ns, p.state, kv_need + kv_grow)
+        ns.pending.append((work_units, done, p))
         self._kick(node)
 
     def _kick(self, node: str) -> None:
@@ -255,22 +306,12 @@ class Simulator:
         if not ns.alive:
             # node died while this batch was in flight: the work is lost,
             # restart the requests instead of stranding their reservations
-            for _, st in batch:
-                self._restart(st)
+            for _, p in batch:
+                self._restart_pass(p)
             return
         for cb, _ in batch:
             cb()
-        # admit kv-waiters whose reservation now fits
-        moved = True
-        while moved and ns.kv_wait:
-            moved = False
-            w, need, grow, cb, st = ns.kv_wait[0]
-            if ns.kv_used + need <= ns.kv_capacity:
-                ns.kv_wait.popleft()
-                self._charge_kv(ns, st, need + grow)
-                ns.pending.append((w, cb, st))
-                moved = True
-        self._kick(node)
+        self._admit_waiters(node)
 
     # -- request lifecycle ----------------------------------------------------
     def _arrive(self, req: TraceRequest, restarted: int = 0,
@@ -289,69 +330,106 @@ class Simulator:
             return
         state = _ReqState(trace=req, pipeline=pipeline, arrival_s=self._now,
                           restarted=restarted, scheduler=self.scheduler)
+        # the prompt pass produces (and therefore "launches") the first
+        # output token
+        state.launched = 1
+        state.inflight = 1
+        state.in_pipeline = True
+        p = _Pass(state, chunk=1, start=0, is_prompt=True, epoch=state.epoch)
         # coordinator -> first stage: token ids
         nbytes = req.input_tokens * self.model.token_bytes
         self._transfer(COORDINATOR, pipeline.stages[0].node, nbytes,
-                       lambda: self._stage_work(state))
+                       lambda: self._stage_work(p))
 
-    def _stage_work(self, state: _ReqState) -> None:
-        """Run the current stage for the current phase."""
-        st = state.pipeline.stages[state.stage_idx]
+    def _limit(self, state: _ReqState) -> int:
+        limit = state.trace.output_tokens
+        if self.max_decode_tokens is not None:
+            limit = min(limit, self.max_decode_tokens)
+        return limit
+
+    def _stage_work(self, p: _Pass) -> None:
+        """Run this pass's current stage."""
+        state = p.state
+        if p.epoch != state.epoch:
+            return                   # request restarted while we queued
+        st = state.pipeline.stages[p.stage_idx]
         ns = self.nodes.get(st.node)
         if ns is None or not ns.alive:
-            self._restart(state)
+            self._restart_pass(p)
             return
         held = self.placement.assignment[st.node].num_layers
         frac = st.layers.num_layers / max(held, 1)
-        if state.phase == "prompt":
+        if p.is_prompt:
             tokens = state.trace.input_tokens
             kv_need = tokens + min(self.kv_output_estimate,
                                    state.trace.output_tokens)
             kv_grow = 0.0
         else:
-            tokens = min(self.decode_chunk,
-                         state.trace.output_tokens - state.decoded)
+            tokens = p.chunk
             kv_need = 0.0
             # decode grows KV only by the tokens that exceed the prompt-time
             # reservation (charging the full chunk when the estimate is first
             # crossed overcharged by up to decode_chunk-1 per node)
             reserved = min(self.kv_output_estimate,
                            state.trace.output_tokens)
-            kv_grow = float(max(0, state.decoded + tokens
-                                - max(reserved, state.decoded)))
+            kv_grow = float(max(0, p.start + p.chunk
+                                - max(reserved, p.start)))
         work = tokens * frac
         self._enqueue_work(st.node, work, kv_need, kv_grow,
-                           lambda: self._stage_done(state), state)
+                           lambda: self._stage_done(p), p)
 
-    def _stage_done(self, state: _ReqState) -> None:
-        pipe = state.pipeline
-        st = pipe.stages[state.stage_idx]
-        last = state.stage_idx == len(pipe.stages) - 1
-        if not last:
-            nxt = pipe.stages[state.stage_idx + 1].node
-            if state.phase == "prompt":
-                nbytes = state.trace.input_tokens * self.model.activation_bytes
-            else:
-                # the final decode chunk may produce fewer tokens than
-                # decode_chunk — charge the actual chunk size, matching
-                # _pass_done's ``produced``
-                produced = min(self.decode_chunk,
-                               state.trace.output_tokens - state.decoded)
-                nbytes = produced * self.model.activation_bytes
-            state.stage_idx += 1
-            self._transfer(st.node, nxt, nbytes,
-                           lambda: self._stage_work(state))
+    def _stage_done(self, p: _Pass) -> None:
+        state = p.state
+        if p.epoch != state.epoch:
             return
-        # pipeline pass complete -> token(s) to coordinator
-        nbytes = self.model.token_bytes * (
-            1 if state.phase == "prompt"
-            else min(self.decode_chunk,
-                     state.trace.output_tokens - state.decoded))
+        pipe = state.pipeline
+        st = pipe.stages[p.stage_idx]
+        last = p.stage_idx == len(pipe.stages) - 1
+        if not last:
+            nxt = pipe.stages[p.stage_idx + 1].node
+            nbytes = (state.trace.input_tokens if p.is_prompt else p.chunk) \
+                * self.model.activation_bytes
+            p.stage_idx += 1
+            self._transfer(st.node, nxt, nbytes,
+                           lambda: self._stage_work(p))
+            return
+        # pass complete -> token(s) to coordinator; with window room the
+        # next chunk leaves for stage 0 from HERE, overlapping the return
+        # hop — the ClusterRuntime's speculative launch, modelled
+        state.in_pipeline = False
+        nbytes = self.model.token_bytes * (1 if p.is_prompt else p.chunk)
         self._transfer(st.node, COORDINATOR, nbytes,
-                       lambda: self._pass_done(state))
+                       lambda: self._pass_done(p))
+        self._launch_from(st.node, state)
 
-    def _pass_done(self, state: _ReqState) -> None:
-        if state.phase == "prompt":
+    def _launch_from(self, src: str, state: _ReqState) -> None:
+        """Launch the next decode pass if the in-flight window has room,
+        output tokens remain uncovered, and no pass is inside the stages.
+        Decode is autoregressive: a chunk's input token is produced only
+        when the previous chunk exits the final stage, so at most ONE pass
+        per request walks the pipeline at any time (exactly like the
+        ClusterRuntime) — the window only absorbs the coordinator return
+        path."""
+        limit = self._limit(state)
+        if state.in_pipeline or state.inflight >= self.max_inflight \
+                or state.launched >= limit:
+            return
+        chunk = min(self.decode_chunk, limit - state.launched)
+        p = _Pass(state, chunk=chunk, start=state.launched,
+                  epoch=state.epoch)
+        state.launched += chunk
+        state.inflight += 1
+        state.in_pipeline = True
+        self._transfer(src, state.pipeline.stages[0].node,
+                       self.model.token_bytes * chunk,
+                       lambda pp=p: self._stage_work(pp))
+
+    def _pass_done(self, p: _Pass) -> None:
+        state = p.state
+        if p.epoch != state.epoch:
+            return
+        state.inflight -= 1
+        if p.is_prompt:
             state.first_token_s = self._now
             state.decoded = 1  # prompt pass emits the first output token
             if self._now >= self.warmup_s:
@@ -359,24 +437,16 @@ class Simulator:
                     self._now - state.arrival_s)
                 self.metrics.decoded_tokens += 1
                 self.metrics.prompt_tokens += state.trace.input_tokens
-            state.phase = "decode"
         else:
-            produced = min(self.decode_chunk,
-                           state.trace.output_tokens - state.decoded)
-            state.decoded += produced
+            state.decoded += p.chunk
             if self._now >= self.warmup_s:
-                self.metrics.decoded_tokens += produced
-        limit = state.trace.output_tokens
-        if self.max_decode_tokens is not None:
-            limit = min(limit, self.max_decode_tokens)
-        if state.decoded >= limit:
+                self.metrics.decoded_tokens += p.chunk
+        if state.decoded >= self._limit(state):
             self._complete(state)
             return
-        state.stage_idx = 0
-        # next decode iteration: coordinator -> first stage (token ids)
-        self._transfer(COORDINATOR, state.pipeline.stages[0].node,
-                       self.model.token_bytes * self.decode_chunk,
-                       lambda: self._stage_work(state))
+        # window slack after confirmation (always the case at depth 1):
+        # the next pass launches from the coordinator, the classic walk
+        self._launch_from(COORDINATOR, state)
 
     def _complete(self, state: _ReqState) -> None:
         if self._now >= self.warmup_s:
@@ -400,17 +470,33 @@ class Simulator:
         sched.finish(state.pipeline,
                      state.trace.input_tokens + self.kv_output_estimate)
 
+    def _restart_pass(self, p: _Pass) -> None:
+        """Restart entry point for per-pass events (dead node, lost batch).
+        With several passes of one request in flight, only the FIRST one to
+        hit the failure restarts the request — the epoch bump turns the
+        rest into no-ops instead of double-restarting."""
+        if p.epoch != p.state.epoch:
+            return
+        self._restart(p.state)
+
     def _restart(self, state: _ReqState) -> None:
         """Request lost a node mid-flight: restart from the prompt phase on a
         freshly scheduled pipeline (KV on dead node is gone).  The abandoned
         pipeline's node + scheduler KV reservations are released here — the
         surviving nodes would otherwise leak them on every failure."""
+        state.epoch += 1             # cancel every in-flight pass
+        state.inflight = 0
+        state.in_pipeline = False
         self.metrics.restarts += 1
         state.restarted += 1
         self._release_kv(state)
         self._finish_reservation(state)
         if state.restarted > 5:
-            return  # drop pathological requests (reservations just released)
+            # drop pathological requests (reservations just released) —
+            # counted, like the schedule-retry cap, so submitted always
+            # reconciles with completed + dropped
+            self.metrics.dropped_requests += 1
+            return
         retry = TraceRequest(state.trace.request_id, self._now,
                              state.trace.input_tokens,
                              max(1, state.trace.output_tokens - state.decoded))
@@ -425,10 +511,11 @@ class Simulator:
         if ns is None:
             return
         ns.alive = False
-        # requests queued (or waiting on KV) at the dead node must restart,
-        # not silently vanish with their reservations held on other nodes
-        stranded = [st for (_, _, st) in ns.pending]
-        stranded += [st for (*_, st) in ns.kv_wait]
+        # passes queued (or waiting on KV) at the dead node must restart
+        # their requests, not silently vanish with reservations held on
+        # other nodes
+        stranded = [p for (_, _, p) in ns.pending]
+        stranded += [p for (*_, p) in ns.kv_wait]
         ns.pending.clear()
         ns.kv_wait.clear()
         if self.replan_fn is not None:
@@ -439,8 +526,8 @@ class Simulator:
                 if n in self.nodes and self.nodes[n].alive:
                     self.nodes[n].rate = self.cluster.node_token_throughput(
                         n, self.model, rng.num_layers)
-        for st in stranded:
-            self._restart(st)
+        for p in stranded:
+            self._restart_pass(p)
 
     def slow_node(self, t: float, name: str, factor: float) -> None:
         self._push(t, self._do_slow, name, factor)

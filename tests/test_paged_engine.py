@@ -1,8 +1,9 @@
 """Paged-KV engine tests: dense-engine equivalence, chunked long-prompt
 prefill (no truncation), pool accounting, admission control/preemption, and
-the engine bugfix regressions (truncation, max_len, max_new_tokens=1)."""
-import dataclasses
+the engine bugfix regressions (truncation, max_len, max_new_tokens=1).
 
+The smoke model + its f32 cast come from tests/harness.py //
+tests/conftest.py (``gqa_model`` is session-scoped there)."""
 import numpy as np
 import pytest
 
@@ -14,18 +15,7 @@ from repro.models import decode_step, init, prefill
 from repro.models.paged import num_paged_layers
 from repro.serving import Engine, EngineConfig, PagedEngine, Request
 
-
-def f32(cfg):
-    """float32 copy so paged (Pallas online-softmax) and dense (plain jnp)
-    paths agree to argmax precision for greedy equivalence checks."""
-    return dataclasses.replace(cfg, param_dtype="float32",
-                               compute_dtype="float32")
-
-
-@pytest.fixture(scope="module")
-def gqa_model():
-    cfg = f32(get_smoke_config("smollm_360m"))
-    return cfg, init(cfg, jax.random.key(0))
+from harness import f32, random_prompts
 
 
 def _reference_greedy(cfg, params, prompt, n_tokens, max_len=64):
@@ -49,9 +39,7 @@ def test_paged_matches_dense_engine_greedy(gqa_model):
     with several concurrent requests, and free every page at the end."""
     cfg, params = gqa_model
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=(n,))
-               for n in (10, 5, 16, 12, 7, 14)]
+    prompts = random_prompts(cfg, (10, 5, 16, 12, 7, 14), seed=0)
 
     dense = Engine(cfg, params, ec)
     paged = PagedEngine(cfg, params, ec, page_size=16)
@@ -76,8 +64,7 @@ def test_paged_hybrid_stack_dense_fallback():
     cfg = f32(get_smoke_config("jamba_1_5_large_398b"))
     assert 0 < num_paged_layers(cfg) < cfg.num_layers  # genuinely hybrid
     params = init(cfg, jax.random.key(2))
-    rng = np.random.RandomState(1)
-    prompt = rng.randint(0, cfg.vocab_size, size=(11,))
+    prompt = random_prompts(cfg, (11,), seed=1)[0]
 
     dense = Engine(cfg, params, EngineConfig(max_batch=2, max_len=48,
                                              prompt_len=16))

@@ -1,88 +1,30 @@
 """ClusterRuntime tests: multi-stage pipelines over per-node stage engines
 must serve token-for-token identically to a single full-model engine (the
-correctness anchor for the cross-node execution layer), pools must drain on
-completion on every stage node, and preemption / transport delays / partial
-inference / failover must not change outputs."""
+correctness anchor for the cross-node execution layer) at EVERY in-flight
+decode depth, pools must drain on completion on every stage node, and
+preemption / transport delays / partial inference / failover / eos arriving
+mid-window must not change outputs or leak pages.  Builders and the
+differential assertions live in tests/harness.py."""
 import dataclasses
 
 import numpy as np
 import pytest
 
-import jax
-
-from repro.configs import get_smoke_config
-from repro.core import (COORDINATOR, LayerRange, MILPOptions, ModelProfile,
-                        Placement, plan, replan_after_failure)
-from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
-from repro.core.cluster import _full_mesh_links
-from repro.models import init
+from repro.core import (COORDINATOR, LayerRange, MILPOptions,
+                        replan_after_failure)
 from repro.models.stage import stage_num_paged_layers
 from repro.serving import (ClusterRuntime, Engine, EngineConfig,
                            InProcessTransport, PagedStageEngine, Request)
 
+from harness import (EC, assert_pools_drained, assert_serves_like_reference,
+                     f32, make_plan, pool_for_one_request, random_assignment,
+                     random_prompts, reference_outputs, serve_on_cluster)
 
-def f32(cfg):
-    """float32 so paged (Pallas online-softmax) and dense logits agree to
-    argmax precision for greedy equivalence."""
-    return dataclasses.replace(cfg, param_dtype="float32",
-                               compute_dtype="float32")
-
-
-def make_cluster(n):
-    nodes, regions = {}, {COORDINATOR: "r0"}
-    for i in range(n):
-        nodes[f"n{i}"] = NodeSpec(f"n{i}", DEVICE_PROFILES["A100"],
-                                  region="r0")
-        regions[f"n{i}"] = "r0"
-    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3,
-                             10e9 / 8, 1e-3)
-    return ClusterSpec(nodes=nodes, links=links)
-
-
-def make_plan(cfg, assignment):
-    profile = ModelProfile.from_dims(
-        cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
-        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
-    placement = Placement({n: LayerRange(*r) for n, r in assignment.items()},
-                          cfg.num_layers)
-    assert placement.validate() == []
-    return plan(make_cluster(len(assignment)), profile, placement=placement)
-
-
-EC = EngineConfig(max_batch=4, max_len=48, prompt_len=16)
-
-
-@pytest.fixture(scope="module")
-def gqa_model():
-    cfg = f32(get_smoke_config("smollm_360m"))
-    return cfg, init(cfg, jax.random.key(0))
-
-
-@pytest.fixture(scope="module")
-def reference(gqa_model):
-    """Prompts + greedy outputs from a single full-model dense engine."""
-    cfg, params = gqa_model
-    rng = np.random.RandomState(0)
-    prompts = [rng.randint(0, cfg.vocab_size, size=(n,))
-               for n in (10, 5, 16, 12)]
-    eng = Engine(cfg, params, EC)
-    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run_until_done(300)
-    assert all(r.done for r in reqs)
-    return prompts, [r.output for r in reqs]
-
-
-def serve(cfg, params, p, prompts, *, paged, new_tokens=6, **kw):
-    rt = ClusterRuntime(cfg, params, p, EC, paged=paged, **kw)
-    reqs = [Request(i, pr, max_new_tokens=new_tokens)
-            for i, pr in enumerate(prompts)]
-    for r in reqs:
-        rt.submit(r)
-    rt.run_until_done()
-    assert all(r.done for r in reqs)
-    return rt, reqs
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # only the property test skips
+    HAVE_HYPOTHESIS = False
 
 
 # --- greedy equivalence: the correctness anchor ------------------------------
@@ -92,38 +34,58 @@ def test_two_stage_matches_single_engine(gqa_model, reference, paged):
     cfg, params = gqa_model
     prompts, ref = reference
     p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
-    rt, reqs = serve(cfg, params, p, prompts, paged=paged)
-    assert [r.output for r in reqs] == ref
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=paged)
     # each engine holds only its slice
     assert [len(e.sparams["blocks"]) for _, e in sorted(rt.engines.items())] \
         == [2, 2]
     for i in range(len(prompts)):
         assert len(rt.served[i].stages) == 2
-    if paged:
-        # pool drains to zero on every stage node after completion
-        assert all(v == 0 for v in rt.pool_pages_used().values())
 
 
+@pytest.mark.parametrize("max_inflight", [1, 2], ids=["depth1", "depth2"])
 @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
-def test_three_stage_matches_single_engine(gqa_model, reference, paged):
+def test_three_stage_matches_single_engine(gqa_model, reference, paged,
+                                           max_inflight):
     """3 uneven stages, with a modelled per-link transport delay — neither
-    the extra hop nor delivery timing may change a single token."""
+    the extra hop, delivery timing, nor a pipelined in-flight window may
+    change a single token."""
     cfg, params = gqa_model
     prompts, ref = reference
     p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
-    rt, reqs = serve(cfg, params, p, prompts, paged=paged,
-                     transport=InProcessTransport(default_delay_s=2e-3))
-    assert [r.output for r in reqs] == ref
+    rt = assert_serves_like_reference(
+        cfg, params, p, prompts, ref, paged=paged, max_inflight=max_inflight,
+        transport=InProcessTransport(default_delay_s=2e-3))
     for i in range(len(prompts)):
         assert len(rt.served[i].stages) == 3
-    if paged:
-        assert all(v == 0 for v in rt.pool_pages_used().values())
     assert rt._now > 0.0          # the virtual clock actually advanced
+
+
+def test_inflight_depth2_reduces_decode_latency(gqa_model, reference):
+    """The acceptance bar for pipelined decode: on a 3-stage placement with
+    per-link delay d > 0, depth 2 launches pass t+1 from the final stage
+    (1 hop to stage 0) instead of round-tripping through the coordinator
+    (2 hops) — per-token decode latency must drop from (k+1)d to k*d while
+    output stays byte-identical to the single full-model engine."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    d = 2e-3
+    lat = {}
+    for depth in (1, 2):
+        rt = assert_serves_like_reference(
+            cfg, params, p, prompts, ref, paged=True, max_inflight=depth,
+            transport=InProcessTransport(default_delay_s=d))
+        lat[depth] = rt.mean_decode_latency()
+    assert lat[1] == pytest.approx(4 * d)      # final->coord->s0 + 2 hops
+    assert lat[2] == pytest.approx(3 * d)      # final->s0 + 2 hops
+    assert lat[2] < 0.8 * lat[1]
 
 
 def test_partial_inference_entry_mid_node(gqa_model, reference):
     """Replicated placement: a request reaching a node that holds [0, 4) at
-    layer 2 must infer only [2, 4) there (§3.3) — outputs unchanged."""
+    layer 2 must infer only [2, 4) there (§3.3) — outputs unchanged, also
+    with an in-flight window."""
     cfg, params = gqa_model
     prompts, ref = reference
     p = make_plan(cfg, {"n0": (0, 2), "n1": (0, 4), "n2": (2, 4)})
@@ -133,54 +95,82 @@ def test_partial_inference_entry_mid_node(gqa_model, reference):
     p = dataclasses.replace(p, flows={(COORDINATOR, "n0"): 1.0,
                                       ("n0", "n1"): 1.0,
                                       ("n1", COORDINATOR): 1.0})
-    rt, reqs = serve(cfg, params, p, prompts, paged=True)
-    assert [r.output for r in reqs] == ref
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=True, max_inflight=2)
     mid_entry = any(
-        st.layers.start > rt.placement.assignment[st.node].start
-        for pipe in rt.served.values() for st in pipe.stages)
+        st_.layers.start > rt.placement.assignment[st_.node].start
+        for pipe in rt.served.values() for st_ in pipe.stages)
     assert mid_entry, "no pipeline exercised a mid-node entry"
-    assert all(v == 0 for v in rt.pool_pages_used().values())
 
 
-def test_pool_exhaustion_preempts_pipeline_wide(gqa_model, reference):
-    """A mid-stage pool that fits one full-budget request forces preemption;
+@pytest.mark.parametrize("max_inflight", [1, 2], ids=["depth1", "depth2"])
+def test_pool_exhaustion_preempts_pipeline_wide(gqa_model, reference,
+                                                max_inflight):
+    """A mid-stage pool that fits one full-budget request forces preemption
+    — with depth 2 that includes cancelling speculative in-flight tokens;
     recompute-on-readmit must keep outputs identical and drain every pool."""
     cfg, params = gqa_model
     prompts, ref = reference
     p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
-    n_paged = stage_num_paged_layers(cfg, LayerRange(2, 3))
-    small = 1 + (EC.max_len // 16) * n_paged
-    rt, reqs = serve(cfg, params, p, prompts, paged=True,
-                     pool_pages={"n1": small})
+    small = pool_for_one_request(cfg, LayerRange(2, 3))
+    rt, reqs = serve_on_cluster(cfg, params, p, prompts, paged=True,
+                                max_inflight=max_inflight,
+                                pool_pages={"n1": small})
     assert [r.output for r in reqs] == ref
     assert any(r.preemptions > 0 for r in reqs)
-    assert all(v == 0 for v in rt.pool_pages_used().values())
+    assert_pools_drained(rt)
 
 
 def test_hybrid_stack_multi_stage_paged(gqa_model):
     """Hybrid (mamba/MoE + GQA) slices: paged attention + dense fallback
-    split across stages still matches the full dense engine.  n0's slice
-    holds *no* paged block at all (jamba's attn blocks sit at layers 3 and
-    7) — the runtime must give it a dense stage engine even in paged mode
-    instead of crashing at construction."""
+    split across stages still matches the full dense engine at depth 2.
+    n0's slice holds *no* paged block at all (jamba's attn blocks sit at
+    layers 3 and 7) — the runtime must give it a dense stage engine even in
+    paged mode instead of crashing at construction."""
+    from repro.configs import get_smoke_config
+    from repro.models import init
+    import jax
     cfg = f32(get_smoke_config("jamba_1_5_large_398b"))
     params = init(cfg, jax.random.key(2))
     assert stage_num_paged_layers(cfg, LayerRange(0, 3)) == 0
-    prompt = np.random.RandomState(1).randint(0, cfg.vocab_size, size=(11,))
+    prompts = random_prompts(cfg, (11,), seed=1)
     ec = EngineConfig(max_batch=2, max_len=48, prompt_len=16)
-    ref_eng = Engine(cfg, params, ec)
-    r1 = Request(0, prompt, max_new_tokens=6)
-    ref_eng.submit(r1)
-    ref_eng.run_until_done(50)
+    ref = reference_outputs(cfg, params, prompts, ec=ec, max_new_tokens=6)
     p = make_plan(cfg, {"n0": (0, 3), "n1": (3, 5), "n2": (5, 8)})
-    rt = ClusterRuntime(cfg, params, p, ec, paged=True)
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=True, max_inflight=2, ec=ec)
     assert not isinstance(rt.engines["n0"], PagedStageEngine)
     assert isinstance(rt.engines["n1"], PagedStageEngine)
-    r2 = Request(0, prompt, max_new_tokens=6)
-    rt.submit(r2)
-    rt.run_until_done()
-    assert r2.output == r1.output
-    assert all(v == 0 for v in rt.pool_pages_used().values())
+
+
+# --- property: any placement x depth x trace ---------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(data=st.data())
+    def test_property_any_depth_matches_single_engine(gqa_model, data):
+        """Random stage count / layer cuts / in-flight depth / trace: the
+        runtime's greedy output is identical to single-engine decode and
+        every pool drains to zero."""
+        cfg, params = gqa_model
+        n_stages = data.draw(st.integers(1, 3), label="n_stages")
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        depth = data.draw(st.integers(1, 3), label="max_inflight")
+        lengths = data.draw(st.lists(st.integers(1, 16), min_size=2,
+                                     max_size=3), label="prompt_lengths")
+        max_new = data.draw(st.lists(st.integers(1, 8),
+                                     min_size=len(lengths),
+                                     max_size=len(lengths)),
+                            label="max_new_tokens")
+        rng = np.random.RandomState(seed)
+        assignment = random_assignment(rng, cfg.num_layers, n_stages)
+        prompts = random_prompts(cfg, lengths, seed=seed)
+        ref = reference_outputs(cfg, params, prompts, ec=EC,
+                                max_new_tokens=max_new)
+        p = make_plan(cfg, assignment)
+        assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                     paged=True, max_inflight=depth,
+                                     max_new_tokens=max_new)
 
 
 # --- scheduler feedback ------------------------------------------------------
@@ -205,21 +195,84 @@ def test_kv_estimator_sees_true_pool_occupancy(gqa_model):
         assert kv.usage[node] == 0
 
 
-# --- failover ----------------------------------------------------------------
+# --- fault injection on the in-flight window ---------------------------------
+
+def test_eos_mid_window_cancels_inflight_cleanly(gqa_model, reference):
+    """eos confirmed at the coordinator while the speculative pass for
+    token t+1 is still mid-pipeline: the pass must be cancelled (epoch),
+    no page may leak, and the truncated output must equal the reference cut
+    at eos — then the SAME runtime must serve a fresh request correctly
+    (caches uncorrupted by the cancelled write)."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    # make the token greedy decode emits mid-stream (index 2 of request 0)
+    # the eos token; requests whose outputs contain it stop there
+    eos = ref[0][2]
+    ec = dataclasses.replace(EC, eos_token=eos)
+
+    def cut(out):
+        return out[:out.index(eos) + 1] if eos in out else out
+
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    rt, reqs = serve_on_cluster(
+        cfg, params, p, prompts, paged=True, max_inflight=3, ec=ec,
+        transport=InProcessTransport(default_delay_s=1e-3))
+    assert [r.output for r in reqs] == [cut(o) for o in ref]
+    assert reqs[0].finish_reason == "stop"
+    assert rt.cancelled_inflight > 0, \
+        "no speculative pass was in flight when eos confirmed"
+    assert_pools_drained(rt)
+    # the runtime keeps serving correctly after the cancellations
+    extra = Request(99, prompts[1], max_new_tokens=6)
+    rt.submit(extra)
+    rt.run_until_done()
+    assert extra.output == cut(ref[1])
+    assert_pools_drained(rt)
+
+
+class _ReorderingTransport(InProcessTransport):
+    """The first delivery to the coordinator is slower than later ones, so
+    a speculative pass's token (output index 1) overtakes prefill's token
+    (index 0) on the return path — legal under the base Transport contract
+    ('send must eventually deliver'), never produced by the FIFO
+    InProcessTransport."""
+
+    def __init__(self):
+        super().__init__(default_delay_s=1e-3)
+        self._slowed = set()
+
+    def delay(self, src, dst, nbytes):
+        d = super().delay(src, dst, nbytes)
+        if dst == COORDINATOR and src not in self._slowed:
+            self._slowed.add(src)
+            return d + 5e-3
+        return d
+
+
+def test_out_of_order_token_arrival_confirms_in_order(gqa_model, reference):
+    """Decode tokens reaching the coordinator before the prefill token must
+    wait in the inbox and confirm in output order once it lands — not
+    strand the request (regression: _on_first_token used to skip the inbox
+    drain)."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    assert_serves_like_reference(cfg, params, p, prompts, ref, paged=False,
+                                 max_inflight=2,
+                                 transport=_ReorderingTransport())
+
 
 def test_failover_replan_re_prefills_in_flight(gqa_model, reference):
-    """Kill a stage node mid-decode: survivors release the victims' KV, the
-    replanned placement is adopted, in-flight requests re-prefill (keeping
-    generated tokens) and finish with unchanged outputs."""
+    """Kill a stage node mid-decode with an active in-flight window: the
+    speculative passes die with the epoch bump, survivors release the
+    victims' KV, the replanned placement is adopted, in-flight requests
+    re-prefill (keeping generated tokens) and finish with unchanged
+    outputs."""
     cfg, params = gqa_model
     prompts, ref = reference
     p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4), "n2": (0, 4)})
-    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
-    reqs = [Request(i, pr, max_new_tokens=6) for i, pr in enumerate(prompts)]
-    for r in reqs:
-        rt.submit(r)
-    for _ in range(6):
-        rt.step()
+    rt, reqs = serve_on_cluster(cfg, params, p, prompts, paged=True,
+                                max_inflight=2, steps=6)
     assert rt.jobs, "nothing in flight before the failure"
     rt.fail_node("n1")
     new = replan_after_failure(p, "n1", MILPOptions(time_limit_s=5.0,
@@ -229,7 +282,7 @@ def test_failover_replan_re_prefills_in_flight(gqa_model, reference):
     rt.run_until_done()
     assert [r.output for r in reqs] == ref
     assert "n1" not in rt.engines
-    assert all(v == 0 for v in rt.pool_pages_used().values())
+    assert_pools_drained(rt)
 
 
 # --- guards ------------------------------------------------------------------
@@ -242,6 +295,31 @@ def test_runtime_rejects_oversized_prompt(gqa_model):
         rt.submit(Request(0, np.arange(EC.max_len + 1) % cfg.vocab_size))
     with pytest.raises(ValueError, match="empty"):
         rt.submit(Request(1, np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="max_inflight"):
+        ClusterRuntime(cfg, params, p, EC, paged=False, max_inflight=0)
+
+
+def test_run_until_done_exhaustion_raises_with_diagnostics(gqa_model):
+    """Regression: exhausting max_iters must raise with queue/in-flight
+    diagnostics, never return silently with requests outstanding — for the
+    ClusterRuntime AND the single-node engines."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    rt.submit(Request(0, np.arange(10) % cfg.vocab_size, max_new_tokens=8))
+    with pytest.raises(RuntimeError, match=r"not done after 2.*queued="):
+        rt.run_until_done(max_iters=2)
+    eng = Engine(cfg, params, EC)
+    eng.submit(Request(0, np.arange(10) % cfg.vocab_size, max_new_tokens=8))
+    with pytest.raises(RuntimeError, match=r"not done after 1.*active=1"):
+        eng.run_until_done(max_iters=1)
+    # fencepost: finishing exactly on the last allowed iteration is success
+    eng2 = Engine(cfg, params, EC)
+    done_in_one = Request(1, np.arange(10) % cfg.vocab_size,
+                          max_new_tokens=1)
+    eng2.submit(done_in_one)
+    eng2.run_until_done(max_iters=1)
+    assert done_in_one.done
 
 
 def test_stage_engine_holds_only_its_slice(gqa_model):

@@ -9,28 +9,11 @@ try:
 except ImportError:                      # only the property test skips
     HAVE_HYPOTHESIS = False
 
-from repro.core import (COORDINATOR, IWRR, HelixScheduler, KVEstimator,
-                        LayerRange, MILPOptions, ModelProfile, Placement,
-                        RandomScheduler, RequestPipeline, SwarmScheduler,
-                        plan)
-from repro.core.cluster import DEVICE_PROFILES, ClusterSpec, NodeSpec
-from repro.core.cluster import _full_mesh_links
+from repro.core import (COORDINATOR, IWRR, KVEstimator, LayerRange,
+                        MILPOptions, Placement, RandomScheduler,
+                        RequestPipeline, SwarmScheduler, plan)
 
-
-def make_cluster(devs):
-    nodes, regions = {}, {COORDINATOR: "r0"}
-    for i, d in enumerate(devs):
-        name = f"n{i}"
-        nodes[name] = NodeSpec(name, DEVICE_PROFILES[d], region="r0")
-        regions[name] = "r0"
-    links = _full_mesh_links(list(nodes), regions, 10e9 / 8, 1e-3, 10e9 / 8, 1e-3)
-    return ClusterSpec(nodes=nodes, links=links)
-
-
-def small_model(num_layers=8):
-    return ModelProfile.from_dims("toy", num_layers=num_layers, d_model=4096,
-                                  d_ff=11008, vocab=32000, n_kv_heads=32,
-                                  head_dim=128)
+from harness import make_cluster, small_model
 
 
 # --- IWRR properties ---------------------------------------------------------
