@@ -11,6 +11,9 @@ Run:  PYTHONPATH=src python examples/serve_cluster.py [--requests 8]
       ... --force-stages 2 --check     # force a real multi-stage pipeline
                                        # and verify token-for-token against
                                        # a single full-model engine
+      ... --transport socket           # one StageWorker *process* per node
+                                       # behind the SocketTransport instead
+                                       # of the in-process virtual clock
 """
 import argparse
 import dataclasses
@@ -44,6 +47,12 @@ def main() -> None:
                     help="per-request in-flight decode window: >= 2 lets "
                          "the final stage launch token t+1 while token t "
                          "travels back to the coordinator")
+    ap.add_argument("--transport", choices=["inproc", "socket"],
+                    default="inproc",
+                    help="inproc: every stage engine in this process on a "
+                         "virtual clock; socket: one StageWorker process "
+                         "per node behind the SocketTransport (real bytes, "
+                         "real wall clock)")
     ap.add_argument("--check", action="store_true",
                     help="verify token-for-token against one full engine")
     args = ap.parse_args()
@@ -68,13 +77,23 @@ def main() -> None:
 
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
-    transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
-    rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
-                        transport=transport,
-                        max_inflight=args.max_inflight)
+    if args.transport == "socket":
+        rt = ClusterRuntime.spawn_workers(cfg, params, p, ec,
+                                          paged=not args.dense,
+                                          max_inflight=args.max_inflight,
+                                          stall_timeout_s=120.0)
+    else:
+        transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
+        rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
+                            transport=transport,
+                            max_inflight=args.max_inflight)
     if not args.dense:
         for node, eng in sorted(rt.engines.items()):
-            print(f"  {node}: pool {eng.pool.num_pages} pages")
+            pages = eng.pool.num_pages if hasattr(eng, "pool") \
+                else eng.pool_num_pages()          # remote: over RPC
+            print(f"  {node}: pool {pages} pages"
+                  + (" (worker process)" if args.transport == "socket"
+                     else ""))
 
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(10,)),
@@ -125,6 +144,8 @@ def main() -> None:
                 (r.request_id, r.output, rr.output)
         print("check: token-for-token identical to a single full-model "
               "engine")
+
+    rt.shutdown()                      # reap worker processes (socket runs)
 
 
 if __name__ == "__main__":

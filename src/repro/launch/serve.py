@@ -14,6 +14,12 @@ Multi-node cluster serving (MILP placement -> IWRR pipelines -> stage
 engines under the ClusterRuntime; one process plays every node):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
       --cluster A100,L4,T4 --stages 2 --batch 4 --prompt 10 --new-tokens 8
+
+Multi-process cluster serving (one StageWorker process per node behind the
+SocketTransport; add --connect HOST:PORT to use externally started
+``python -m repro.launch.worker`` processes, e.g. on other hosts):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
+      --cluster A100,L4 --stages 2 --transport socket --new-tokens 8
 """
 from __future__ import annotations
 
@@ -83,9 +89,16 @@ def run_cluster(cfg, args) -> None:
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=args.batch, max_len=args.max_len,
                       prompt_len=min(16, args.max_len))
-    rt = ClusterRuntime(cfg, params, p, ec, paged=args.paged or not args.dense,
-                        page_size=args.page_size,
-                        max_inflight=args.max_inflight)
+    if args.transport == "socket":
+        rt = ClusterRuntime.spawn_workers(
+            cfg, params, p, ec, paged=args.paged or not args.dense,
+            page_size=args.page_size, max_inflight=args.max_inflight,
+            connect=args.connect or None, stall_timeout_s=120.0)
+    else:
+        rt = ClusterRuntime(cfg, params, p, ec,
+                            paged=args.paged or not args.dense,
+                            page_size=args.page_size,
+                            max_inflight=args.max_inflight)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
                     max_new_tokens=args.new_tokens)
@@ -103,6 +116,7 @@ def run_cluster(cfg, args) -> None:
     print(f"cluster: {len(reqs)} reqs, {toks} tokens in {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s)")
     print("sampled ids:", [r.output for r in reqs[:2]])
+    rt.shutdown()                      # reap worker processes (socket runs)
 
 
 def main() -> None:
@@ -129,6 +143,15 @@ def main() -> None:
     ap.add_argument("--max-inflight", type=int, default=1,
                     help="with --cluster: per-request in-flight decode "
                          "window (pipelined decode at >= 2)")
+    ap.add_argument("--transport", choices=["inproc", "socket"],
+                    default="inproc",
+                    help="with --cluster: socket runs one StageWorker "
+                         "process per node behind the SocketTransport")
+    ap.add_argument("--connect", default="",
+                    help="with --transport socket: listen on HOST:PORT and "
+                         "wait for externally started workers (python -m "
+                         "repro.launch.worker --connect HOST:PORT) instead "
+                         "of spawning local subprocesses")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

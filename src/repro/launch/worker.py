@@ -1,0 +1,202 @@
+"""StageWorker: one Helix compute node as its own OS process.
+
+The worker dials the coordinator (``--connect host:port``), then speaks the
+length-prefixed frame protocol of ``repro.serving.transport``: every frame
+is ``(method, args)`` and gets an ``("ok", result)`` or ``("err",
+traceback)`` reply.  The first call is ``init``, which carries everything
+the node needs — the model config, the full parameter tree, the assigned
+``LayerRange``, the engine config, and the pool sizing the coordinator
+derived from this node's VRAM — and builds the ``StageEngine`` /
+``PagedStageEngine`` the remaining calls drive:
+
+  stage(tag, payload)          stash an in-flight payload (prompt chunk /
+                               activations) shipped by the SocketTransport;
+                               a later engine call resolves the StagedRef
+  prefill_stage / prefill_chunk / decode_stage / sample-side bookkeeping
+                               the stage-engine API, argument-for-argument
+  alloc_slot / free_slot / ensure / release / kv_tokens_* / pool_used
+                               slot + KV bookkeeping the runtime's
+                               admission and scheduler feedback use
+  init                         (re)build the engine — a replan that moves
+                               this node's slice re-inits over the same
+                               connection
+  ping / shutdown              liveness and clean exit
+
+``ClusterRuntime.spawn_workers`` launches one of these per placed node as a
+subprocess; for multi-host runs, start workers by hand on each machine and
+point them at the coordinator's ``--connect`` address.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import traceback
+from collections import OrderedDict
+from typing import Any, Dict, List
+
+from ..configs.base import BlockSpec, ModelConfig
+from ..core.placement import LayerRange
+from ..serving.engine import EngineConfig
+from ..serving.stage_engine import DecodeItem, PagedStageEngine, StageEngine
+from ..serving.transport import (FrameError, StagedRef, decode_payload,
+                                 encode_payload, recv_frame, send_frame)
+
+# staged payloads whose pass got cancelled (epoch bump) are never resolved;
+# cap the stash so they can't accumulate across a long-lived worker
+MAX_STAGED = 1024
+
+
+def config_from_wire(d: Dict[str, Any]) -> ModelConfig:
+    d = dict(d)
+    d["pattern"] = tuple(BlockSpec(**dict(b)) for b in d["pattern"])
+    d["prologue"] = tuple(BlockSpec(**dict(b)) for b in d["prologue"])
+    return ModelConfig(**d)
+
+
+class StageWorker:
+    """Owns one node's stage engine plus the staging area for in-flight
+    transport payloads."""
+
+    def __init__(self):
+        self.engine = None
+        self.staged: "OrderedDict[int, Any]" = OrderedDict()
+        self.node = "?"
+
+    # -- staged payloads -------------------------------------------------
+    def _resolve(self, x):
+        if isinstance(x, StagedRef):
+            try:
+                return self.staged.pop(x.tag)
+            except KeyError:
+                raise RuntimeError(
+                    f"staged payload {x.tag} missing on {self.node} "
+                    "(never arrived, or evicted past the "
+                    f"{MAX_STAGED}-entry cap)") from None
+        return x
+
+    def do_stage(self, tag: int, payload) -> None:
+        self.staged[tag] = payload
+        while len(self.staged) > MAX_STAGED:
+            self.staged.popitem(last=False)     # oldest = cancelled passes
+
+    # -- lifecycle -------------------------------------------------------
+    def do_init(self, spec: Dict[str, Any]) -> str:
+        cfg = config_from_wire(spec["cfg"])
+        ec = EngineConfig(**dict(spec["ec"]))
+        layers = LayerRange(*spec["layers"])
+        self.node = spec.get("node", "?")
+        if spec["paged"]:
+            self.engine = PagedStageEngine(
+                cfg, spec["params"], layers, ec,
+                num_pages=spec["num_pages"], page_size=spec["page_size"],
+                interpret=spec["interpret"], rng_seed=spec["rng_seed"])
+        else:
+            self.engine = StageEngine(cfg, spec["params"], layers, ec,
+                                      rng_seed=spec["rng_seed"])
+        self.staged.clear()
+        return f"{self.node}: layers [{layers.start}, {layers.end})"
+
+    # -- dispatch --------------------------------------------------------
+    def handle(self, method: str, args: List[Any]):
+        if method == "ping":
+            return "pong"
+        if method == "stage":
+            return self.do_stage(args[0], args[1])
+        if method == "init":
+            return self.do_init(args[0])
+        eng = self.engine
+        if eng is None:
+            raise RuntimeError(f"{method!r} before init")
+        if method == "prefill_stage":
+            slot, x, entry = args
+            return eng.prefill_stage(slot, self._resolve(x), entry)
+        if method == "prefill_chunk":
+            slot, x, entry, start = args
+            return eng.prefill_chunk(slot, self._resolve(x), entry, start)
+        if method == "decode_stage":
+            items = [DecodeItem(slot=s, pos=p, entry=e, token=t,
+                                h=self._resolve(h))
+                     for s, p, e, t, h in args[0]]
+            return [(o.h, o.logits) for o in eng.decode_stage(items)]
+        if method == "alloc_slot":
+            return eng.alloc_slot(args[0])
+        if method == "free_slot":
+            return eng.free_slot(args[0])
+        if method == "ensure":
+            return eng.ensure(args[0], args[1])
+        if method == "release":
+            return eng.release(args[0])
+        if method == "kv_tokens_used":
+            return eng.kv_tokens_used()
+        if method == "kv_tokens_capacity":
+            return eng.kv_tokens_capacity()
+        if method == "pool_used":
+            return eng.pool_used()
+        if method == "pool_num_pages":
+            pool = getattr(eng, "pool", None)
+            return pool.num_pages if pool is not None else None
+        raise RuntimeError(f"unknown method {method!r}")
+
+
+def serve_connection(sock: socket.socket) -> None:
+    """Frame loop: one request, one reply, until shutdown or the
+    coordinator goes away."""
+    worker = StageWorker()
+    while True:
+        try:
+            frame = recv_frame(sock)
+        except socket.timeout:
+            continue                     # idle coordinator, not a dead one:
+                                         # keep waiting for the next frame
+        except (FrameError, OSError):
+            return                       # coordinator gone: exit quietly
+        try:
+            method, args = decode_payload(frame)
+        except (FrameError, ValueError) as e:
+            _reply(sock, ("err", f"undecodable request: {e}"))
+            continue
+        if method == "shutdown":
+            _reply(sock, ("ok", None))
+            return
+        try:
+            result = worker.handle(method, args)
+        except Exception:
+            _reply(sock, ("err", traceback.format_exc(limit=20)))
+        else:
+            _reply(sock, ("ok", result))
+
+
+def _reply(sock: socket.socket, payload) -> None:
+    try:
+        send_frame(sock, encode_payload(payload))
+    except (OSError, FrameError):
+        pass                             # coordinator gone mid-reply
+
+
+def run_worker(host: str, port: int, timeout_s: float = 300.0) -> None:
+    sock = socket.create_connection((host, port), timeout=timeout_s)
+    sock.settimeout(timeout_s)
+    try:
+        serve_connection(sock)
+    finally:
+        sock.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="coordinator address to dial (the coordinator "
+                         "assigns this worker a node + layer slice over "
+                         "the wire)")
+    ap.add_argument("--timeout-s", type=float, default=300.0,
+                    help="socket timeout for connect and mid-frame reads; "
+                         "an idle-but-open connection waits forever (a "
+                         "dead coordinator closes the socket, which exits "
+                         "the worker)")
+    args = ap.parse_args()
+    host, _, port = args.connect.rpartition(":")
+    run_worker(host or "127.0.0.1", int(port), timeout_s=args.timeout_s)
+
+
+if __name__ == "__main__":
+    main()

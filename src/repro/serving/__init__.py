@@ -6,3 +6,8 @@ from .runtime import ClusterRuntime, InProcessTransport, Transport
 from .sampling import sample_token
 from .stage_engine import (DecodeItem, DecodeOut, PagedStageEngine,
                            StageEngine, make_stage_engine)
+from .transport import (FrameError, RemoteStageEngine, SocketTransport,
+                        StagedRef, TransportStalled, WorkerChannel,
+                        WorkerDied, WorkerError, decode_payload,
+                        encode_payload, payload_bytes, recv_frame,
+                        send_frame)

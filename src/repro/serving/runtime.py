@@ -51,6 +51,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+import queue as _queue
+import socket as _socket
+import subprocess
+import sys
 import time
 from collections import defaultdict, deque
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
@@ -66,6 +71,8 @@ from .engine import EngineConfig, Request
 from .kv_pool import full_rectangle_pages, pages_for_vram
 from .stage_engine import (DecodeItem, PagedStageEngine, StageEngine,
                            make_stage_engine)
+from .transport import (RemoteStageEngine, SocketTransport, WorkerChannel,
+                        WorkerDied)
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +142,13 @@ class _Job:
     next_pos: int = 0                # cache position of the next pass
     inbox: Dict[int, int] = dataclasses.field(default_factory=dict)
                                      # out-of-order sampled tokens by index
+    # -- delivery hardening (a Transport may duplicate or reorder) -------
+    seen: set = dataclasses.field(default_factory=set)
+                                     # dedup keys of deliveries already run
+    hop_next: Dict[int, int] = dataclasses.field(default_factory=dict)
+                                     # per-stage next expected chunk offset
+    hop_stash: Dict[int, Dict[int, Any]] = dataclasses.field(
+        default_factory=dict)        # reordered chunks awaiting predecessors
 
     @property
     def resumed(self) -> bool:
@@ -160,7 +174,10 @@ class ClusterRuntime:
                  pool_pages: Optional[Mapping[str, int]] = None,
                  transport: Optional[Transport] = None,
                  interpret: Optional[bool] = None, rng_seed: int = 0,
-                 max_inflight: int = 1):
+                 max_inflight: int = 1,
+                 engine_factory: Optional[Callable[["ClusterRuntime", str,
+                                                    LayerRange], Any]] = None,
+                 stall_timeout_s: float = 60.0):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cfg = cfg
@@ -172,6 +189,8 @@ class ClusterRuntime:
         self.pool_pages = dict(pool_pages or {})
         self.interpret = interpret
         self.rng_seed = rng_seed
+        self.stall_timeout_s = stall_timeout_s
+        self._engine_factory = engine_factory
         self.cluster = plan.cluster
         self.placement = plan.placement
         self.profile = plan.model
@@ -180,9 +199,20 @@ class ClusterRuntime:
                              f"{cfg.name} has {cfg.num_layers}")
         self.scheduler = plan.make_scheduler()
         self.transport = transport or InProcessTransport()
-        self.transport.bind(lambda d, fn: self._push(self._now + d, fn))
+        # realtime transports (sockets) finish deliveries on their own
+        # threads: they get a thread-safe mailbox drained by step(), and the
+        # loop runs on the wall clock.  Virtual-clock transports keep the
+        # deterministic event heap.
+        self.realtime = bool(getattr(self.transport, "realtime", False))
+        self._mailbox: "_queue.Queue" = _queue.Queue()
+        self._t0 = time.monotonic()
+        if self.realtime:
+            self.transport.bind(lambda d, fn: self._mailbox.put(fn))
+        else:
+            self.transport.bind(lambda d, fn: self._push(self._now + d, fn))
         self._chunked = paged and all_blocks_paged(cfg)
 
+        self.workers: Dict[str, Any] = {}   # node -> worker process handle
         self.engines: Dict[str, Any] = {}
         for node, rng in sorted(self.placement.assignment.items()):
             self.engines[node] = self._make_engine(node, rng)
@@ -208,13 +238,15 @@ class ClusterRuntime:
         self.decode_latencies: Dict[int, float] = {}
 
     # -- engine construction ------------------------------------------------
-    def _make_engine(self, node: str, rng: LayerRange):
+    def _engine_spec(self, node: str, rng: LayerRange) -> Dict[str, Any]:
+        """Paged/dense choice + pool sizing for a node's slice — shared by
+        local construction and the worker-init payload, so a remote node's
+        pool is sized exactly as a local one's would be."""
         n_paged = stage_num_paged_layers(self.cfg, rng)
         if not self.paged or n_paged == 0:
             # hybrid models can hand a node an all-SSM/MLA slice with no
             # paged block at all — that node serves dense even in paged mode
-            return StageEngine(self.cfg, self.params, rng, self.ec,
-                               rng_seed=self.rng_seed)
+            return {"paged": False, "num_pages": None}
         rect = full_rectangle_pages(self.cfg, max_batch=self.ec.max_batch,
                                     max_len=self.ec.max_len,
                                     page_size=self.page_size,
@@ -230,8 +262,18 @@ class ClusterRuntime:
             # floor: one full-budget request must always fit
             blocks = -(-self.ec.max_len // self.page_size)
             pages = max(pages, 1 + blocks * n_paged)
+        return {"paged": True, "num_pages": pages}
+
+    def _make_engine(self, node: str, rng: LayerRange):
+        if self._engine_factory is not None:
+            return self._engine_factory(self, node, rng)
+        spec = self._engine_spec(node, rng)
+        if not spec["paged"]:
+            return StageEngine(self.cfg, self.params, rng, self.ec,
+                               rng_seed=self.rng_seed)
         return PagedStageEngine(self.cfg, self.params, rng, self.ec,
-                                num_pages=pages, page_size=self.page_size,
+                                num_pages=spec["num_pages"],
+                                page_size=self.page_size,
                                 interpret=self.interpret,
                                 rng_seed=self.rng_seed)
 
@@ -259,34 +301,61 @@ class ClusterRuntime:
         req.submitted_s = time.time()
         self.queue.append(_Job(req))
 
+    def _idle(self) -> bool:
+        return not (self.queue or self.jobs or self._events or self._ready
+                    or self._mailbox.qsize())
+
     def run_until_done(self, max_iters: int = 100000) -> None:
         for _ in range(max_iters):
-            if not (self.queue or self.jobs or self._events or self._ready):
+            if self._idle():
                 return
-            if not self.step():
-                raise RuntimeError(
-                    "runtime stalled: queued requests cannot be admitted "
-                    "(cluster slots/pools too small?); " + self._state())
-        if not (self.queue or self.jobs or self._events or self._ready):
+            if self.step():
+                continue
+            # realtime (socket) transports complete deliveries on their own
+            # threads: no local progress just means the bytes are still in
+            # flight — block on the mailbox instead of declaring a stall
+            if self.realtime and self._await_delivery():
+                continue
+            raise RuntimeError(
+                "runtime stalled: queued requests cannot be admitted "
+                "(cluster slots/pools too small?); " + self._state())
+        if self._idle():
             return                   # finished exactly on the last step
         raise RuntimeError(
             f"not done after {max_iters} iterations; " + self._state())
 
+    def _await_delivery(self) -> bool:
+        """Block for the next transport delivery (wall clock), bounded by
+        ``stall_timeout_s`` so a deadlocked socket run fails fast with
+        diagnostics instead of hanging CI."""
+        try:
+            fn = self._mailbox.get(timeout=self.stall_timeout_s)
+        except _queue.Empty:
+            return False
+        fn()
+        return True
+
     def _state(self) -> str:
         """Queue / in-flight diagnostics for stall and iteration-budget
-        errors — never return silently with work outstanding."""
+        errors — never return silently with work outstanding.  Transports
+        that can stall (bounded socket queues) append their per-link
+        report, so a wedged link is named in the error."""
         windows = {j.req.request_id: f"{len(j.req.output)}+{j.inflight}"
                    for j in self.jobs.values()}
         ready = {n: len(v) for n, v in self._ready.items() if v}
+        describe = getattr(self.transport, "describe", None)
+        extra = f" transport={describe()}" if callable(describe) else ""
         return (f"queued={len(self.queue)} "
                 f"in_flight(confirmed+window)={windows} "
                 f"pending_events={len(self._events)} ready={ready} "
-                f"now={self._now:.6f}")
+                f"now={self._now:.6f}" + extra)
 
     def step(self) -> bool:
         """One runtime iteration: admit, drain deliveries due now, then one
         batched decode per node with resident stage-work.  Returns whether
         anything progressed."""
+        if self.realtime:
+            self._now = max(self._now, time.monotonic() - self._t0)
         progressed = self._admit()
         if self._events:
             self._now = max(self._now, self._events[0][0])
@@ -294,6 +363,13 @@ class ClusterRuntime:
                 _, _, fn = heapq.heappop(self._events)
                 fn()
                 progressed = True
+        while True:                  # wall-clock deliveries (socket runs)
+            try:
+                fn = self._mailbox.get_nowait()
+            except _queue.Empty:
+                break
+            fn()
+            progressed = True
         for node in [n for n, v in self._ready.items() if v]:
             work = self._ready.pop(node)
             work = [w for w in work if w["job"].epoch == w["epoch"]]
@@ -361,6 +437,9 @@ class ClusterRuntime:
             job.next_j = len(job.req.output) if job.resumed else 1
             job.next_pos = S
             job.inbox = {}
+            job.seen = set()
+            job.hop_next = {}
+            job.hop_stash = {}
             job.seq = self._jseq
             self._jseq += 1
             self.jobs[job.req.request_id] = job
@@ -390,18 +469,54 @@ class ClusterRuntime:
 
     def _prefill_at(self, job: _Job, epoch: int, si: int, x,
                     off: Optional[int]) -> None:
+        """Delivery guard for prefill payloads: drop duplicates, and execute
+        chunks strictly in offset order per stage (a transport is allowed to
+        duplicate and reorder; KV writes are not allowed to)."""
         if job.epoch != epoch:
             return                      # preempted/requeued mid-flight
+        if off is None:                 # single-shot prefill: one hop/stage
+            if ("pf", si) in job.seen:
+                return
+            job.seen.add(("pf", si))
+            self._prefill_exec(job, epoch, si, x, None)
+            return
+        expect = job.hop_next.get(si, 0)
+        if off < expect:
+            return                      # duplicate of an executed chunk
+        if off > expect:                # overtook a predecessor: wait
+            job.hop_stash.setdefault(si, {})[off] = x
+            return
+        self._prefill_exec(job, epoch, si, x, off)
+        while job.epoch == epoch:       # run any chunks unblocked by this one
+            nxt = job.hop_next.get(si, 0)
+            stash = job.hop_stash.get(si, {})
+            if nxt not in stash:
+                break
+            self._prefill_exec(job, epoch, si, stash.pop(nxt), nxt)
+
+    def _chunk_tokens(self, job: _Job, off: Optional[int]) -> int:
+        """Token count of the prefill payload at offset ``off`` — derived
+        from the request, not the payload (socket runs deliver opaque
+        staged-payload handles)."""
+        total = len(self._prefill_tokens(job))
+        if off is None:
+            return total
+        return min(max(1, self.ec.prompt_len), total - off)
+
+    def _prefill_exec(self, job: _Job, epoch: int, si: int, x,
+                      off: Optional[int]) -> None:
         st = job.pipe.stages[si]
         eng = self.engines[st.node]
         slot = job.slots[st.node]
         entry = st.layers.start
+        n_tok = self._chunk_tokens(job, off)
         if self._chunked:
             out = eng.prefill_chunk(slot, x, entry, off)
         else:
             out = eng.prefill_stage(slot, x, entry)
+        if off is not None:
+            job.hop_next[si] = off + n_tok
         last = si == len(job.pipe.stages) - 1
-        n_tok = (len(x) if entry == 0 else x.shape[1])
         if not last:
             nxt = job.pipe.stages[si + 1].node
             self._send(st.node, nxt, out, self._act_bytes(n_tok),
@@ -447,6 +562,9 @@ class ClusterRuntime:
         their last confirmed token instead of sampling a new one)."""
         if job.epoch != epoch:
             return
+        if ("first",) in job.seen:
+            return                      # duplicated delivery (chaos link)
+        job.seen.add(("first",))
         req = job.req
         if not job.resumed:
             req.output.append(int(tok))
@@ -472,6 +590,8 @@ class ClusterRuntime:
         arrivals ahead of the expected index wait in the job's inbox."""
         if job.epoch != epoch:
             return
+        if j < len(job.req.output):
+            return                      # duplicate of a confirmed token
         job.inbox[j] = int(tok)
         self._drain_inbox(job)
 
@@ -511,9 +631,23 @@ class ClusterRuntime:
         first = job.pipe.stages[0].node
         self._send(src, first, int(tok), self.profile.token_bytes,
                    lambda t, e=epoch, p=pos, jj=j:
-                   self._ready[first].append(
-                       dict(job=job, epoch=e, si=0, tok=int(t), h=None,
-                            pos=p, j=jj)))
+                   self._enqueue_decode(job, e, 0, int(t), None, p, jj))
+
+    def _enqueue_decode(self, job: _Job, epoch: int, si: int, tok: int,
+                        h, pos: int, j: int) -> None:
+        """Delivery guard for decode stage-work: a duplicated delivery of
+        the same (stage, output-index) pass is dropped — running it twice
+        would double-decode the pass (and two copies in one batch would
+        trip the engine's duplicate-slot invariant)."""
+        if job.epoch != epoch:
+            return
+        key = ("dw", si, j)
+        if key in job.seen:
+            return
+        job.seen.add(key)
+        node = job.pipe.stages[si].node
+        self._ready[node].append(dict(job=job, epoch=epoch, si=si, tok=tok,
+                                      h=h, pos=pos, j=j))
 
     def _grow_or_preempt(self, eng, node: str, job: _Job, tokens: int
                          ) -> bool:
@@ -583,11 +717,9 @@ class ClusterRuntime:
                 else:
                     nxt = job.pipe.stages[si + 1].node
                     self._send(node, nxt, out.h, self._act_bytes(1),
-                               lambda h, jb=job, e=epoch, s=si + 1, n=nxt,
+                               lambda h, jb=job, e=epoch, s=si + 1,
                                p=w["pos"], jj=j:
-                               self._ready[n].append(
-                                   dict(job=jb, epoch=e, si=s, tok=0, h=h,
-                                        pos=p, j=jj)))
+                               self._enqueue_decode(jb, e, s, 0, h, p, jj))
 
     # -- completion / preemption ---------------------------------------------
     def _release_all(self, job: _Job) -> None:
@@ -625,7 +757,18 @@ class ClusterRuntime:
     def fail_node(self, name: str) -> None:
         """Kill a node's engine; every request whose pipeline crossed it is
         requeued (its KV on survivors released) pending a replanned pipeline."""
-        self.engines.pop(name, None)
+        eng = self.engines.pop(name, None)
+        close = getattr(eng, "close", None)
+        if callable(close):
+            close()                  # remote: drop the (possibly dead) channel
+        proc = self.workers.pop(name, None)
+        if proc is not None and proc.poll() is None:
+            proc.terminate()
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=10)    # reap: no zombie per failover
         for job in list(self.jobs.values()):
             if name in job.pipe.nodes:
                 self._requeue(job, clear_pipe=True)
@@ -681,8 +824,12 @@ class ClusterRuntime:
 
     # -- introspection --------------------------------------------------------
     def pool_pages_used(self) -> Dict[str, int]:
-        return {n: e.pool.used for n, e in self.engines.items()
-                if isinstance(e, PagedStageEngine)}
+        out = {}
+        for n, e in self.engines.items():
+            used = e.pool_used()
+            if used is not None:
+                out[n] = used
+        return out
 
     def mean_decode_latency(self) -> float:
         """Mean per-token decode latency on the virtual clock, over
@@ -690,3 +837,145 @@ class ClusterRuntime:
         the number the in-flight window is meant to shrink."""
         lats = list(self.decode_latencies.values())
         return sum(lats) / len(lats) if lats else 0.0
+
+    # -- multi-process workers ------------------------------------------------
+    @classmethod
+    def spawn_workers(cls, cfg: ModelConfig, params, plan,
+                      engine_cfg: EngineConfig, *,
+                      connect: Optional[str] = None,
+                      queue_depth: int = 8,
+                      worker_timeout_s: float = 300.0,
+                      **kw) -> "ClusterRuntime":
+        """Build a runtime whose stage engines live in separate OS
+        processes behind a ``SocketTransport``.
+
+        By default one ``repro.launch.worker`` subprocess is launched per
+        placed node and dialled back over loopback TCP.  With ``connect``
+        ("host:port") the coordinator instead listens there and waits for
+        externally started workers (``python -m repro.launch.worker
+        --connect host:port`` on each machine), accepting one per node in
+        sorted-node order.  Everything a node needs — config, params, its
+        layer slice, pool sizing — ships over the wire at init, so workers
+        start from nothing but the address.
+
+        Failover works by killing a worker (``kill_worker``/``fail_node``);
+        ``apply_plan`` re-inits surviving workers whose slice moved over
+        their existing channels and respawns processes for dead nodes that
+        re-enter the placement.  Call ``shutdown()`` when done.
+        """
+        nodes = sorted(plan.placement.assignment)
+        channels: Dict[str, WorkerChannel] = {}
+        procs: Dict[str, Any] = {}
+
+        def _spawn(node: str) -> WorkerChannel:
+            lsock = _socket.socket()
+            lsock.bind(("127.0.0.1", 0))
+            lsock.listen(1)
+            host, port = lsock.getsockname()
+            env = dict(os.environ)
+            src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            env["PYTHONPATH"] = src_root + (
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH")
+                else "")
+            proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.worker",
+                 "--connect", f"{host}:{port}",
+                 "--timeout-s", str(worker_timeout_s)],
+                env=env)
+            lsock.settimeout(worker_timeout_s)
+            try:
+                conn, _ = lsock.accept()
+            except _socket.timeout:
+                proc.kill()
+                raise RuntimeError(
+                    f"worker for {node} did not dial back within "
+                    f"{worker_timeout_s}s") from None
+            finally:
+                lsock.close()
+            procs[node] = proc
+            return WorkerChannel(conn, node=node, timeout_s=worker_timeout_s)
+
+        if connect is not None:
+            host, _, port = connect.rpartition(":")
+            lsock = _socket.socket()
+            lsock.setsockopt(_socket.SOL_SOCKET, _socket.SO_REUSEADDR, 1)
+            lsock.bind((host or "0.0.0.0", int(port)))
+            lsock.listen(len(nodes))
+            lsock.settimeout(worker_timeout_s)
+            print(f"waiting for {len(nodes)} workers on {connect} ...")
+            try:
+                for node in nodes:
+                    conn, addr = lsock.accept()
+                    channels[node] = WorkerChannel(conn, node=node,
+                                                   timeout_s=worker_timeout_s)
+                    print(f"  {node} <- worker at {addr[0]}:{addr[1]}")
+            finally:
+                lsock.close()
+        else:
+            for node in nodes:
+                channels[node] = _spawn(node)
+
+        transport = SocketTransport(channels, queue_depth=queue_depth)
+        cfg_wire = dataclasses.asdict(cfg)
+        ec_wire = dataclasses.asdict(engine_cfg)
+
+        def factory(rt: "ClusterRuntime", node: str, rng: LayerRange):
+            import jax
+            # converted per init/respawn and then dropped — holding a
+            # permanent numpy copy would double the coordinator's weight
+            # footprint for the runtime's whole life
+            params_np = jax.tree.map(np.asarray, rt.params)
+            ch = channels.get(node)
+            if ch is None or not ch.alive:
+                if connect is not None:
+                    raise WorkerDied(
+                        f"no live worker for {node} and external workers "
+                        "cannot be respawned by the coordinator")
+                ch = _spawn(node)
+                channels[node] = ch
+                rt.workers[node] = procs[node]
+                transport.channels[node] = ch
+                transport.dead.discard(node)
+            spec = rt._engine_spec(node, rng)
+            ch.call("init", {
+                "node": node, "cfg": cfg_wire, "ec": ec_wire,
+                "layers": (rng.start, rng.end), "params": params_np,
+                "paged": spec["paged"], "num_pages": spec["num_pages"],
+                "page_size": rt.page_size, "interpret": rt.interpret,
+                "rng_seed": rt.rng_seed})
+            return RemoteStageEngine(ch, node, rng_seed=rt.rng_seed)
+
+        rt = cls(cfg, params, plan, engine_cfg, transport=transport,
+                 engine_factory=factory, **kw)
+        rt.workers.update(procs)
+        return rt
+
+    def kill_worker(self, name: str) -> None:
+        """Hard-kill a node's worker process (fault injection: SIGKILL, no
+        cleanup) — the caller then drives ``fail_node`` + replan +
+        ``apply_plan`` exactly as for any node loss."""
+        proc = self.workers.get(name)
+        if proc is None:
+            raise ValueError(f"{name} has no worker process")
+        proc.kill()
+        proc.wait(timeout=30)
+
+    def shutdown(self) -> None:
+        """Tear down remote workers and transport threads (no-op for pure
+        in-process runtimes)."""
+        for eng in self.engines.values():
+            close = getattr(eng, "close", None)
+            if callable(close):
+                close()
+        close = getattr(self.transport, "close", None)
+        if callable(close):
+            close()
+        for proc in self.workers.values():
+            if proc.poll() is None:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+        self.workers.clear()

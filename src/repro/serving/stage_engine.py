@@ -106,6 +106,13 @@ class _StageEngineBase:
     def kv_tokens_capacity(self) -> int:
         raise NotImplementedError
 
+    def pool_used(self) -> Optional[int]:
+        """Allocated page count, or None for engines without a page pool —
+        uniform across local and remote engines so the runtime's drain
+        checks work over RPC."""
+        pool = getattr(self, "pool", None)
+        return pool.used if pool is not None else None
+
     # -- batch assembly ---------------------------------------------------
     def _assemble(self, items: List[DecodeItem]):
         B = self.ec.max_batch + 1

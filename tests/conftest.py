@@ -5,6 +5,12 @@ import pytest
 
 import jax
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long end-to-end tests (multi-process workers); "
+                   "deselect with -m 'not slow'")
+
 from repro.models import init
 
 from harness import EC, f32, random_prompts, reference_outputs
