@@ -30,6 +30,7 @@ def _register():
     from .scheduling_tables import bench_scheduling_deepdive
     from .serving_tables import (bench_distributed_cluster,
                                  bench_high_heterogeneity,
+                                 bench_kv_quant,
                                  bench_pipelined_decode,
                                  bench_single_cluster)
     BENCHES.update({
@@ -37,6 +38,7 @@ def _register():
         "fig8_distributed": bench_distributed_cluster,
         "fig9e_heterogeneity": bench_high_heterogeneity,
         "pipelined_decode": bench_pipelined_decode,
+        "kv_quant": bench_kv_quant,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

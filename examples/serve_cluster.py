@@ -53,8 +53,13 @@ def main() -> None:
                          "virtual clock; socket: one StageWorker process "
                          "per node behind the SocketTransport (real bytes, "
                          "real wall clock)")
+    ap.add_argument("--kv-dtype", choices=["param", "int8"], default="param",
+                    help="KV page storage on paged stage engines; int8 "
+                         "quantizes pages for ~2x pool capacity")
     ap.add_argument("--check", action="store_true",
-                    help="verify token-for-token against one full engine")
+                    help="verify against one full engine: token-for-token "
+                         "for param-dtype KV, tolerance (majority token "
+                         "agreement + matching first token) for int8")
     args = ap.parse_args()
 
     cfg = get_smoke_config("smollm_360m")
@@ -77,15 +82,17 @@ def main() -> None:
 
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
+    kv_dtype = args.kv_dtype if args.kv_dtype != "param" else None
     if args.transport == "socket":
         rt = ClusterRuntime.spawn_workers(cfg, params, p, ec,
                                           paged=not args.dense,
+                                          kv_dtype=kv_dtype,
                                           max_inflight=args.max_inflight,
                                           stall_timeout_s=120.0)
     else:
         transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
         rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
-                            transport=transport,
+                            transport=transport, kv_dtype=kv_dtype,
                             max_inflight=args.max_inflight)
     if not args.dense:
         for node, eng in sorted(rt.engines.items()):
@@ -139,11 +146,30 @@ def main() -> None:
         for r in ref_reqs:
             ref.submit(r)
         ref.run_until_done(2000)
-        for r, rr in zip(reqs, ref_reqs):
-            assert r.output == rr.output, \
-                (r.request_id, r.output, rr.output)
-        print("check: token-for-token identical to a single full-model "
-              "engine")
+        if kv_dtype == "int8":
+            # int8 KV is lossy, so greedy trajectories may diverge once a
+            # near-tie flips (and this smoke model's random weights make
+            # every step a near-tie) — check within tolerance: most
+            # requests' first decoded token must survive the quantization
+            # round, and a majority of all tokens must agree overall
+            hits = total = first = 0
+            for r, rr in zip(reqs, ref_reqs):
+                first += r.output[0] == rr.output[0]
+                hits += sum(a == b for a, b in zip(r.output, rr.output))
+                total += len(rr.output)
+            agree = hits / max(total, 1)
+            assert first * 2 >= len(reqs), \
+                f"int8 first-token agreement {first}/{len(reqs)} < half"
+            assert agree >= 0.5, f"int8 token agreement {agree:.2f} < 0.5"
+            print(f"check: int8 within tolerance of the full-model engine "
+                  f"({first}/{len(reqs)} first tokens exact, "
+                  f"{agree:.0%} of all tokens agree)")
+        else:
+            for r, rr in zip(reqs, ref_reqs):
+                assert r.output == rr.output, \
+                    (r.request_id, r.output, rr.output)
+            print("check: token-for-token identical to a single full-model "
+                  "engine")
 
     rt.shutdown()                      # reap worker processes (socket runs)
 

@@ -117,7 +117,8 @@ class ModelProfile:
     def from_dims(name: str, num_layers: int, d_model: int, d_ff: int,
                   vocab: int, n_kv_heads: int, head_dim: int,
                   dtype_bytes: float = 2.0, moe_experts: int = 0,
-                  moe_topk: int = 0) -> "ModelProfile":
+                  moe_topk: int = 0, kv_dtype: str = "param",
+                  kv_page_size: int = 16) -> "ModelProfile":
         # Per-layer params: attn (qkvo) + mlp.  MoE multiplies the FFN by the
         # expert count for *storage* but only top-k for *compute*.
         attn = 4 * d_model * d_model
@@ -126,7 +127,18 @@ class ModelProfile:
         compute_ffn = ffn * (moe_topk if moe_topk else 1)
         layer_param_bytes = (attn + storage_ffn) * dtype_bytes
         flops_per_token_layer = 2 * (attn + compute_ffn)
-        kv = 2 * n_kv_heads * head_dim * dtype_bytes
+        if kv_dtype == "int8":
+            # int8 pages: 1 byte/element + one f32 absmax per (page, kv_head)
+            # for K and V each, amortized over the page's tokens — mirrors
+            # serving.kv_pool.page_bytes so the planner/simulator see the
+            # same ~2x capacity the engines actually get
+            kv = (2 * n_kv_heads * head_dim * 1.0
+                  + 2 * n_kv_heads * 4.0 / kv_page_size)
+        elif kv_dtype in (None, "param"):
+            kv = 2 * n_kv_heads * head_dim * dtype_bytes
+        else:
+            raise ValueError(f"kv_dtype must be 'param' or 'int8', "
+                             f"got {kv_dtype!r}")
         return ModelProfile(
             name=name,
             num_layers=num_layers,

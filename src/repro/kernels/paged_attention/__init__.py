@@ -1,3 +1,4 @@
 from .kernel import paged_attention
-from .ops import dense_to_pages, paged_attention_op
+from .ops import dense_to_pages, paged_attention_op, streamed_pages_per_step
+from .quant import dequantize_kv_pages, quantize_kv_pages, quantized_append
 from .ref import paged_attention_ref

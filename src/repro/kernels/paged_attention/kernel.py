@@ -10,6 +10,20 @@ HBM->VMEM.  Online-softmax accumulators live in VMEM scratch across the
 Grid: (B, NP).  Per step the kernel sees one (page, KH, D) K/V tile and the
 (H, D) query for that sequence; all query heads for a kv head are processed
 together (GQA groups stay in VREGs).
+
+Variable-context streaming: the grid stays the static worst case (B, NP) —
+jit-friendly, one compiled program for any batch mix — but the K/V index
+maps clamp the page coordinate at each sequence's last *active* page
+(``ceil(length / page) - 1``).  Pallas elides the HBM->VMEM copy whenever an
+index map returns the same block index as the previous grid step, so steps
+past a sequence's live context re-reference the last active page and move no
+bytes; ``@pl.when(ip * page < length)`` already skipped their compute.  Per
+launch the kernel therefore streams ``sum_b max(ceil(len_b/page), 1)`` pages
+instead of ``B * NP`` (see ``ops.streamed_pages_per_step``).
+
+Int8 KV: when per-page, per-kv-head scales are passed, K/V pages are int8
+and dequantized in-VMEM inside ``_compute`` (one (KH,)-scale row per page,
+riding the same clamped index map), halving decode HBM traffic again.
 """
 from __future__ import annotations
 
@@ -24,9 +38,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, page: int, num_pages: int,
-            groups: int, scale: float):
+def _kernel(block_tables, lengths, q_ref, *refs, page: int, num_pages: int,
+            groups: int, scale: float, quantized: bool):
+    if quantized:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     ip = pl.program_id(1)
     length = lengths[b]
@@ -41,6 +59,8 @@ def _kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
         k = k_ref[0].astype(jnp.float32)                  # (page, KH, D)
+        if quantized:
+            k = k * ks_ref[0][None, :, None]              # in-VMEM dequant
         H, D = q.shape
         KH = k.shape[1]
         qg = q.reshape(KH, groups, D)
@@ -58,6 +78,8 @@ def _kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
         v = v_ref[0].astype(jnp.float32)                  # (page, KH, D)
+        if quantized:
+            v = v * vs_ref[0][None, :, None]
         pv = jax.lax.dot_general(
             p, v, (((2,), (0,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)           # (KH, G, D)
@@ -73,28 +95,49 @@ def _kernel(block_tables, lengths, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_tables: jax.Array, lengths: jax.Array, *,
+                    k_scales: jax.Array | None = None,
+                    v_scales: jax.Array | None = None,
                     interpret: bool = False) -> jax.Array:
     """q: (B,H,D); k/v_pages: (P,page,KH,D); block_tables: (B,NP);
-    lengths: (B,) -> (B,H,D)."""
+    lengths: (B,) -> (B,H,D).
+
+    ``k_scales``/``v_scales``: optional (P, KH) float32 per-page per-kv-head
+    absmax scales — when given, pages are int8 and dequantized in-VMEM.
+    """
     B, H, D = q.shape
     P, page, KH, _ = k_pages.shape
     NP = block_tables.shape[1]
     G = H // KH
     scale = 1.0 / math.sqrt(D)
+    quantized = k_scales is not None
+    if quantized and v_scales is None:
+        raise ValueError("k_scales given without v_scales")
+
+    def page_id(b, ip, bt, ln):
+        # clamp at the last active page: steps past ceil(len/page) re-issue
+        # the same index, so the pipeline elides their HBM->VMEM copy
+        last = jnp.maximum((ln[b] + page - 1) // page - 1, 0)
+        return bt[b, jnp.minimum(ip, last)]
+
+    kv_spec = pl.BlockSpec(
+        (1, page, KH, D), lambda b, ip, bt, ln: (page_id(b, ip, bt, ln),
+                                                 0, 0, 0))
+    scale_spec = pl.BlockSpec(
+        (1, KH), lambda b, ip, bt, ln: (page_id(b, ip, bt, ln), 0))
+    q_spec = pl.BlockSpec((1, H, D), lambda b, ip, bt, ln: (b, 0, 0))
 
     kernel = functools.partial(_kernel, page=page, num_pages=NP,
-                               groups=G, scale=scale)
+                               groups=G, scale=scale, quantized=quantized)
+    if quantized:
+        in_specs = [q_spec, kv_spec, scale_spec, kv_spec, scale_spec]
+        operands = (q, k_pages, k_scales, v_pages, v_scales)
+    else:
+        in_specs = [q_spec, kv_spec, kv_spec]
+        operands = (q, k_pages, v_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, NP),
-        in_specs=[
-            pl.BlockSpec((1, H, D),
-                         lambda b, ip, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, page, KH, D),
-                         lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
-            pl.BlockSpec((1, page, KH, D),
-                         lambda b, ip, bt, ln: (bt[b, ip], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, D), lambda b, ip, bt, ln: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KH, G), jnp.float32),
@@ -102,9 +145,10 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pltpu.VMEM((KH, G, D), jnp.float32),
         ],
     )
+    out_dtype = q.dtype
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), out_dtype),
         interpret=interpret,
-    )(block_tables, lengths, q, k_pages, v_pages)
+    )(block_tables, lengths, *operands)

@@ -7,20 +7,35 @@ tables, admission control) lives in ``repro.serving.kv_pool.PagePool``;
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import paged_attention
 from .ref import paged_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+def paged_attention_op(q, k_pages, v_pages, block_tables, lengths,
+                       k_scales=None, v_scales=None, *,
                        interpret: bool = False):
     return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                           k_scales=k_scales, v_scales=v_scales,
                            interpret=interpret)
+
+
+def streamed_pages_per_step(lengths, page: int) -> int:
+    """Pages the variable-context kernel copies HBM->VMEM per launch.
+
+    The grid stays (B, NP), but the clamped index map re-issues the last
+    active page index past ``ceil(len/page)`` and Pallas elides copies whose
+    index matches the previous grid step — so traffic follows the *live*
+    context: ``sum_b max(ceil(len_b / page), 1)`` pages (the fixed-grid
+    kernel streamed ``B * NP``)."""
+    l = np.asarray(lengths)
+    return int(np.maximum(-(-l // page), 1).sum())
 
 
 def dense_to_pages(k: jax.Array, v: jax.Array, lengths, page: int

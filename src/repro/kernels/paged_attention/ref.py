@@ -10,14 +10,16 @@ NEG_INF = -1e30
 
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                        block_tables: jax.Array, lengths: jax.Array
-                        ) -> jax.Array:
+                        block_tables: jax.Array, lengths: jax.Array,
+                        k_scales: jax.Array | None = None,
+                        v_scales: jax.Array | None = None) -> jax.Array:
     """Decode attention over a paged KV pool.
 
     q:            (B, H, D)        one query token per sequence
     k/v_pages:    (P, page, KH, D) global page pool
     block_tables: (B, NP) int32    page ids per sequence (sequential fill)
     lengths:      (B,) int32       tokens in each sequence's KV
+    k/v_scales:   (P, KH) f32      optional int8 per-page per-head scales
     returns:      (B, H, D)
     """
     B, H, D = q.shape
@@ -27,6 +29,10 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     k = k_pages[block_tables]            # (B, NP, page, KH, D)
     v = v_pages[block_tables]
+    if k_scales is not None:
+        from .quant import dequantize_kv_pages
+        k = dequantize_kv_pages(k, k_scales[block_tables], q.dtype)
+        v = dequantize_kv_pages(v, v_scales[block_tables], q.dtype)
     k = k.reshape(B, NP * page, KH, D)
     v = v.reshape(B, NP * page, KH, D)
     qg = q.reshape(B, KH, G, D)

@@ -46,16 +46,18 @@ def run_paged(cfg, args) -> None:
     prompts past the bucket, paged_attention decode."""
     ec = EngineConfig(max_batch=args.batch, max_len=args.max_len,
                       prompt_len=min(16, args.max_len))
+    kv_dtype = args.kv_dtype if args.kv_dtype != "param" else None
     vram_pages = pages_for_vram(cfg, args.vram_gb * 1e9,
-                                page_size=args.page_size)
+                                page_size=args.page_size, kv_dtype=kv_dtype)
     rect = full_rectangle_pages(cfg, max_batch=ec.max_batch,
                                 max_len=ec.max_len, page_size=args.page_size)
     num_pages = min(vram_pages, rect) if args.vram_gb > 0 else rect
-    print(f"pool: {num_pages} pages x {args.page_size} tokens "
+    print(f"pool: {num_pages} pages x {args.page_size} tokens, "
+          f"kv_dtype={args.kv_dtype} "
           f"(VRAM budget {vram_pages}, full rectangle {rect})")
     params = init(cfg, jax.random.key(0))
     eng = PagedEngine(cfg, params, ec, num_pages=num_pages,
-                      page_size=args.page_size)
+                      page_size=args.page_size, kv_dtype=kv_dtype)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
                     max_new_tokens=args.new_tokens)
@@ -77,9 +79,11 @@ def run_cluster(cfg, args) -> None:
     """Multi-node serving: MILP placement over a (VRAM-derated) cluster, one
     stage engine per node, requests walking IWRR pipelines through the
     ClusterRuntime."""
+    kv_dtype = args.kv_dtype if args.kv_dtype != "param" else None
     profile = ModelProfile.from_dims(
         cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
-        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim,
+        kv_dtype=args.kv_dtype, kv_page_size=args.page_size)
     cluster = make_serving_cluster(profile, devs=args.cluster.split(","),
                                    force_stages=args.stages)
     p = plan(cluster, profile, MILPOptions(time_limit_s=10.0, lns_rounds=0,
@@ -92,12 +96,13 @@ def run_cluster(cfg, args) -> None:
     if args.transport == "socket":
         rt = ClusterRuntime.spawn_workers(
             cfg, params, p, ec, paged=args.paged or not args.dense,
-            page_size=args.page_size, max_inflight=args.max_inflight,
+            page_size=args.page_size, kv_dtype=kv_dtype,
+            max_inflight=args.max_inflight,
             connect=args.connect or None, stall_timeout_s=120.0)
     else:
         rt = ClusterRuntime(cfg, params, p, ec,
                             paged=args.paged or not args.dense,
-                            page_size=args.page_size,
+                            page_size=args.page_size, kv_dtype=kv_dtype,
                             max_inflight=args.max_inflight)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
@@ -133,6 +138,10 @@ def main() -> None:
     ap.add_argument("--dense", action="store_true",
                     help="with --cluster: dense stage engines, not paged")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", choices=["param", "int8"], default="param",
+                    help="KV page storage: 'param' keeps the model dtype, "
+                         "'int8' quantizes pages (per-page per-head absmax "
+                         "scales) for ~2x pool capacity at fixed VRAM")
     ap.add_argument("--vram-gb", type=float, default=16.0,
                     help="node VRAM for pool sizing (0 = full rectangle)")
     ap.add_argument("--cluster", default="",

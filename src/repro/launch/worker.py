@@ -89,6 +89,7 @@ class StageWorker:
             self.engine = PagedStageEngine(
                 cfg, spec["params"], layers, ec,
                 num_pages=spec["num_pages"], page_size=spec["page_size"],
+                kv_dtype=spec.get("kv_dtype"),
                 interpret=spec["interpret"], rng_seed=spec["rng_seed"])
         else:
             self.engine = StageEngine(cfg, spec["params"], layers, ec,

@@ -264,66 +264,99 @@ def _gqa_qkv_rope(cfg, params, x, positions):
 
 
 def gqa_decode_paged(cfg, params, x, k_pages, v_pages, block_table, cache_pos,
-                     *, interpret=False):
+                     *, k_scales=None, v_scales=None, interpret=False):
     """Single-token decode against a shared page pool.
 
     x: (B,1,d); k/v_pages: (P,page,KH,D) pool shared across layers;
     block_table: (B,NP) page ids for this layer; cache_pos: (B,) absolute
     position of the token being generated.  Writes the new K/V into the page
     holding ``cache_pos`` and runs the Pallas paged_attention kernel over the
-    sequence's pages.  Returns (out, k_pages, v_pages).
+    sequence's pages.  ``k_scales``/``v_scales``: (P, KH) f32 when the pool
+    is int8 (per-page per-kv-head absmax; the append requantizes the touched
+    page and the kernel dequantizes in-VMEM).  Returns
+    (out, k_pages, v_pages, k_scales, v_scales).
     """
     from ..kernels.paged_attention import paged_attention_op
 
     B = x.shape[0]
     page = k_pages.shape[1]
     q, k_new, v_new = _gqa_qkv_rope(cfg, params, x, cache_pos[:, None])
-    pid = jnp.take_along_axis(block_table, (cache_pos // page)[:, None],
-                              axis=1)[:, 0]
-    off = cache_pos % page
-    k_pages = k_pages.at[pid, off].set(k_new[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[pid, off].set(v_new[:, 0].astype(v_pages.dtype))
+    if k_scales is not None:
+        from ..kernels.paged_attention import quantized_append
+        k_pages, k_scales = quantized_append(k_pages, k_scales, block_table,
+                                             cache_pos, k_new)
+        v_pages, v_scales = quantized_append(v_pages, v_scales, block_table,
+                                             cache_pos, v_new)
+    else:
+        pid = jnp.take_along_axis(block_table, (cache_pos // page)[:, None],
+                                  axis=1)[:, 0]
+        off = cache_pos % page
+        k_pages = k_pages.at[pid, off].set(k_new[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[pid, off].set(v_new[:, 0].astype(v_pages.dtype))
     ctx = paged_attention_op(q[:, 0], k_pages, v_pages, block_table,
-                             cache_pos + 1, interpret=interpret)
+                             cache_pos + 1, k_scales, v_scales,
+                             interpret=interpret)
     out = jnp.einsum("bshk,hkd->bsd", ctx[:, None].astype(x.dtype),
                      params["o"])
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales
 
 
 def gqa_prefill_paged(cfg, params, x, k_pages, v_pages, block_table,
-                      positions):
+                      positions, *, k_scales=None, v_scales=None,
+                      active_blocks=None):
     """Chunked paged prefill: write this chunk's K/V into the pool and attend
     the chunk's queries causally over everything the sequence has written so
     far (earlier chunks included — pure-JAX gather over the block table; the
     Pallas kernel covers the decode side).
 
     x: (B,C,d); positions: (B,C) absolute positions of the chunk tokens.
-    Returns (out (B,C,d), k_pages, v_pages).
+    ``active_blocks``: static cap on the gather — only the first
+    ``active_blocks`` table entries (>= ceil((pos+C)/page), the pages that
+    actually hold tokens) are materialized, instead of the whole per-sequence
+    ``NP`` budget; masked-out entries contributed exactly 0 to the softmax
+    (NEG_INF underflows), so capping is numerically identical.
+    ``k_scales``/``v_scales``: (P, KH) f32 for int8 pools — the chunk is
+    appended via page-granular requantization and the gather dequantizes.
+    Returns (out (B,C,d), k_pages, v_pages, k_scales, v_scales).
     """
     B, C, d = x.shape
     P, page, KH, D = k_pages.shape
     NP = block_table.shape[1]
     H = cfg.num_heads
     G = H // KH
+    nact = NP if active_blocks is None else max(1, min(active_blocks, NP))
     q, k_new, v_new = _gqa_qkv_rope(cfg, params, x, positions)
-    pid = jnp.take_along_axis(block_table, positions // page, axis=1)
-    off = positions % page
-    k_pages = k_pages.at[pid, off].set(k_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[pid, off].set(v_new.astype(v_pages.dtype))
-
-    k_all = k_pages[block_table].reshape(B, NP * page, KH, D)
-    v_all = v_pages[block_table].reshape(B, NP * page, KH, D)
+    if k_scales is not None:
+        from ..kernels.paged_attention import (dequantize_kv_pages,
+                                               quantized_append)
+        k_pages, k_scales = quantized_append(k_pages, k_scales, block_table,
+                                             positions[:, 0], k_new)
+        v_pages, v_scales = quantized_append(v_pages, v_scales, block_table,
+                                             positions[:, 0], v_new)
+        bt = block_table[:, :nact]
+        k_all = dequantize_kv_pages(k_pages[bt], k_scales[bt], x.dtype)
+        v_all = dequantize_kv_pages(v_pages[bt], v_scales[bt], x.dtype)
+    else:
+        pid = jnp.take_along_axis(block_table, positions // page, axis=1)
+        off = positions % page
+        k_pages = k_pages.at[pid, off].set(k_new.astype(k_pages.dtype))
+        v_pages = v_pages.at[pid, off].set(v_new.astype(v_pages.dtype))
+        bt = block_table[:, :nact]
+        k_all = k_pages[bt]
+        v_all = v_pages[bt]
+    k_all = k_all.reshape(B, nact * page, KH, D)
+    v_all = v_all.reshape(B, nact * page, KH, D)
     qg = q.reshape(B, C, KH, G, D)
     s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_all,
                    preferred_element_type=jnp.float32) / math.sqrt(D)
-    kpos = jnp.arange(NP * page)
+    kpos = jnp.arange(nact * page)
     mask = kpos[None, None, :] <= positions[:, :, None]        # (B,C,S)
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     attn = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhgcs,bshd->bchgd", attn.astype(x.dtype), v_all)
     ctx = ctx.reshape(B, C, H, D)
     out = jnp.einsum("bshk,hkd->bsd", ctx, params["o"])
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales
 
 
 def gqa_cache_init(cfg, batch: int, max_len: int, window: int, dtype):

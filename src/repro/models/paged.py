@@ -93,18 +93,23 @@ def _mlp(cfg, p, h):
     return h
 
 
-def _block_decode_paged(cfg, p, h, kp, vp, table, cache_pos, interpret):
+def _block_decode_paged(cfg, p, h, kp, vp, ks, vs, table, cache_pos,
+                        interpret):
     hn = apply_norm(cfg, p["norm1"], h)
-    out, kp, vp = gqa_decode_paged(cfg, p["mix"], hn, kp, vp, table,
-                                   cache_pos, interpret=interpret)
-    return _mlp(cfg, p, h + out), kp, vp
+    out, kp, vp, ks, vs = gqa_decode_paged(cfg, p["mix"], hn, kp, vp, table,
+                                           cache_pos, k_scales=ks,
+                                           v_scales=vs, interpret=interpret)
+    return _mlp(cfg, p, h + out), kp, vp, ks, vs
 
 
-def _block_prefill_paged(cfg, p, h, kp, vp, table, positions):
+def _block_prefill_paged(cfg, p, h, kp, vp, ks, vs, table, positions,
+                         active_blocks=None):
     hn = apply_norm(cfg, p["norm1"], h)
-    out, kp, vp = gqa_prefill_paged(cfg, p["mix"], hn, kp, vp, table,
-                                    positions)
-    return _mlp(cfg, p, h + out), kp, vp
+    out, kp, vp, ks, vs = gqa_prefill_paged(cfg, p["mix"], hn, kp, vp, table,
+                                            positions, k_scales=ks,
+                                            v_scales=vs,
+                                            active_blocks=active_blocks)
+    return _mlp(cfg, p, h + out), kp, vp, ks, vs
 
 
 # ---------------------------------------------------------------------------
@@ -113,12 +118,14 @@ def _block_prefill_paged(cfg, p, h, kp, vp, table, positions):
 
 def decode_step_paged(cfg: ModelConfig, params, tokens, caches, cache_pos,
                       k_pages, v_pages, tables_pro, tables_super, *,
-                      interpret: bool = False):
+                      k_scales=None, v_scales=None, interpret: bool = False):
     """One autoregressive step over the paged pool.
 
     tokens/cache_pos: (B,); k/v_pages: (P,page,KH,D); tables_pro:
-    (n_paged_prologue, B, NP); tables_super: (repeats, n_paged_pattern, B, NP).
-    Returns (logits (B,V), new dense-fallback caches, k_pages, v_pages).
+    (n_paged_prologue, B, NP); tables_super: (repeats, n_paged_pattern, B, NP);
+    k/v_scales: (P, KH) f32 when the pool is int8, else None.
+    Returns (logits (B,V), new dense-fallback caches, k_pages, v_pages,
+    k_scales, v_scales).
     """
     positions = cache_pos[:, None]
     h = _embed(cfg, params, tokens[:, None], positions)
@@ -129,9 +136,9 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, caches, cache_pos,
         new_caches["prologue"] = []
         for i, b in enumerate(cfg.prologue):
             if is_paged_block(cfg, b):
-                h, k_pages, v_pages = _block_decode_paged(
+                h, k_pages, v_pages, k_scales, v_scales = _block_decode_paged(
                     cfg, params["prologue"][i], h, k_pages, v_pages,
-                    tables_pro[li], cache_pos, interpret)
+                    k_scales, v_scales, tables_pro[li], cache_pos, interpret)
                 new_caches["prologue"].append({})
                 li += 1
             else:
@@ -141,14 +148,14 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, caches, cache_pos,
                 new_caches["prologue"].append(nc)
 
     def superblock(carry, xs):
-        h, kp, vp = carry
+        h, kp, vp, ks, vs = carry
         layer_params, layer_cache, layer_tables = xs
         new_layer_cache = {}
         ti = 0
         for i, b in enumerate(cfg.pattern):
             if is_paged_block(cfg, b):
-                h, kp, vp = _block_decode_paged(
-                    cfg, layer_params[f"pos{i}"], h, kp, vp,
+                h, kp, vp, ks, vs = _block_decode_paged(
+                    cfg, layer_params[f"pos{i}"], h, kp, vp, ks, vs,
                     layer_tables[ti], cache_pos, interpret)
                 new_layer_cache[f"pos{i}"] = {}
                 ti += 1
@@ -157,25 +164,28 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, caches, cache_pos,
                                             h, layer_cache[f"pos{i}"],
                                             cache_pos, None)
                 new_layer_cache[f"pos{i}"] = nc
-        return (h, kp, vp), new_layer_cache
+        return (h, kp, vp, ks, vs), new_layer_cache
 
-    (h, k_pages, v_pages), new_super = jax.lax.scan(
-        superblock, (h, k_pages, v_pages),
+    (h, k_pages, v_pages, k_scales, v_scales), new_super = jax.lax.scan(
+        superblock, (h, k_pages, v_pages, k_scales, v_scales),
         (params["super"], caches["super"], tables_super))
     new_caches["super"] = new_super
     h = apply_norm(cfg, params["final_norm"], h)
     logits = _logits(cfg, params, h)[:, 0]
-    return logits, new_caches, k_pages, v_pages
+    return logits, new_caches, k_pages, v_pages, k_scales, v_scales
 
 
 def prefill_chunk_paged(cfg: ModelConfig, params, tokens, start_pos,
-                        k_pages, v_pages, tables_pro, tables_super):
+                        k_pages, v_pages, tables_pro, tables_super, *,
+                        k_scales=None, v_scales=None, active_blocks=None):
     """Prefill one prompt chunk, appending its K/V to the pool.
 
     Only valid when ``all_blocks_paged(cfg)`` — every layer's history lives
     in the pool, so chunk N attends over chunks 0..N via the block tables and
     no dense caches are needed.  tokens: (B,C); start_pos: (B,) absolute
-    position of tokens[:, 0].  Returns (last-token logits, k_pages, v_pages).
+    position of tokens[:, 0].  ``active_blocks``: static per-layer gather cap
+    (>= ceil((start+C)/page)); None gathers the whole NP budget.  Returns
+    (last-token logits, k_pages, v_pages, k_scales, v_scales).
     """
     B, C = tokens.shape
     positions = start_pos[:, None] + jnp.arange(C)[None, :]
@@ -183,25 +193,26 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, start_pos,
 
     li = 0
     for i, b in enumerate(cfg.prologue):
-        h, k_pages, v_pages = _block_prefill_paged(
-            cfg, params["prologue"][i], h, k_pages, v_pages, tables_pro[li],
-            positions)
+        h, k_pages, v_pages, k_scales, v_scales = _block_prefill_paged(
+            cfg, params["prologue"][i], h, k_pages, v_pages, k_scales,
+            v_scales, tables_pro[li], positions, active_blocks)
         li += 1
 
     def superblock(carry, xs):
-        h, kp, vp = carry
+        h, kp, vp, ks, vs = carry
         layer_params, layer_tables = xs
         for i in range(len(cfg.pattern)):
-            h, kp, vp = _block_prefill_paged(
-                cfg, layer_params[f"pos{i}"], h, kp, vp, layer_tables[i],
-                positions)
-        return (h, kp, vp), None
+            h, kp, vp, ks, vs = _block_prefill_paged(
+                cfg, layer_params[f"pos{i}"], h, kp, vp, ks, vs,
+                layer_tables[i], positions, active_blocks)
+        return (h, kp, vp, ks, vs), None
 
-    (h, k_pages, v_pages), _ = jax.lax.scan(
-        superblock, (h, k_pages, v_pages), (params["super"], tables_super))
+    (h, k_pages, v_pages, k_scales, v_scales), _ = jax.lax.scan(
+        superblock, (h, k_pages, v_pages, k_scales, v_scales),
+        (params["super"], tables_super))
     h = apply_norm(cfg, params["final_norm"], h)
     logits = _logits(cfg, params, h[:, -1:])[:, 0]
-    return logits, k_pages, v_pages
+    return logits, k_pages, v_pages, k_scales, v_scales
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +220,8 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, start_pos,
 # ---------------------------------------------------------------------------
 
 def absorb_dense_prefill(cfg: ModelConfig, caches, k_pages, v_pages,
-                         table, slot: int, seq_len: int, page: int):
+                         table, slot: int, seq_len: int, page: int, *,
+                         k_scales=None, v_scales=None):
     """Move a single-request dense prefill's GQA K/V into the page pool.
 
     Hybrid stacks (MLA/SSM/windowed blocks present) prefill single-shot with
@@ -218,16 +230,33 @@ def absorb_dense_prefill(cfg: ModelConfig, caches, k_pages, v_pages,
     (replaced by ``{}``), keeping only the fallback caches dense.
 
     caches: prefill output with batch 1; table: host (L, max_batch, NP) int32
-    page-id array.  Returns (caches', k_pages, v_pages).
+    page-id array.  Int8 pools (``k_scales``/``v_scales`` given) quantize
+    each destination page exactly once — no RMW drift on this path.
+    Returns (caches', k_pages, v_pages, k_scales, v_scales).
     """
     import numpy as np
 
     n_pro, n_pp = paged_layer_counts(cfg)
     pos = np.arange(seq_len)
     blk, off = pos // page, jnp.asarray(pos % page)
+    nblk = -(-seq_len // page)
 
     def scatter(layer_idx, k, v):
-        nonlocal k_pages, v_pages
+        nonlocal k_pages, v_pages, k_scales, v_scales
+        if k_scales is not None:
+            from ..kernels.paged_attention import quantize_kv_pages
+            pids = jnp.asarray(table[layer_idx, slot, :nblk])
+            pad = nblk * page - seq_len
+            KH, D = k.shape[-2:]
+            kb = jnp.pad(k.astype(jnp.float32), ((0, pad), (0, 0), (0, 0)))
+            vb = jnp.pad(v.astype(jnp.float32), ((0, pad), (0, 0), (0, 0)))
+            kq, ks = quantize_kv_pages(kb.reshape(nblk, page, KH, D))
+            vq, vs = quantize_kv_pages(vb.reshape(nblk, page, KH, D))
+            k_pages = k_pages.at[pids].set(kq)
+            v_pages = v_pages.at[pids].set(vq)
+            k_scales = k_scales.at[pids].set(ks)
+            v_scales = v_scales.at[pids].set(vs)
+            return
         pids = jnp.asarray(table[layer_idx, slot, blk])
         k_pages = k_pages.at[pids, off].set(k.astype(k_pages.dtype))
         v_pages = v_pages.at[pids, off].set(v.astype(v_pages.dtype))
@@ -256,4 +285,4 @@ def absorb_dense_prefill(cfg: ModelConfig, caches, k_pages, v_pages,
             ti += 1
         else:
             out["super"][f"pos{i}"] = c
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales

@@ -194,16 +194,18 @@ def stage_decode(cfg: ModelConfig, sparams, layers: LayerRange, tok, h_in,
 
 def stage_prefill_chunk_paged(cfg: ModelConfig, sparams, layers: LayerRange,
                               x, entry: int, start_pos, k_pages, v_pages,
-                              tables):
+                              tables, *, k_scales=None, v_scales=None,
+                              active_blocks=None):
     """Prefill one prompt chunk through the slice, appending K/V to the
     node's pool.  Only valid when every block in [entry, layers.end) is paged
     (use ``stage_prefill`` + ``stage_absorb_dense_prefill`` for hybrids).
 
     x: (B,C) tokens when ``entry == 0`` else (B,C,d); start_pos: (B,)
     absolute position of x[:, 0]; tables: (n_local_paged, B, NP) block
-    tables in local paged-layer order.  Returns ``(out, k_pages, v_pages)``
-    with ``out`` = last-token logits when the slice ends the model, else
-    outgoing chunk activations (B,C,d).
+    tables in local paged-layer order; ``active_blocks``: static gather cap
+    (see ``gqa_prefill_paged``).  Returns ``(out, k_pages, v_pages,
+    k_scales, v_scales)`` with ``out`` = last-token logits when the slice
+    ends the model, else outgoing chunk activations (B,C,d).
     """
     C = x.shape[1]
     positions = start_pos[:, None] + jnp.arange(C)[None, :]
@@ -216,23 +218,25 @@ def stage_prefill_chunk_paged(cfg: ModelConfig, sparams, layers: LayerRange,
         if not is_paged_block(cfg, b):
             raise ValueError(f"layer {l} of {cfg.name} is not paged; chunked "
                              "stage prefill requires an all-paged slice")
-        h, k_pages, v_pages = _block_prefill_paged(cfg, p, h, k_pages,
-                                                   v_pages, tables[li],
-                                                   positions)
+        h, k_pages, v_pages, k_scales, v_scales = _block_prefill_paged(
+            cfg, p, h, k_pages, v_pages, k_scales, v_scales, tables[li],
+            positions, active_blocks)
         li += 1
     if layers.end == cfg.num_layers:
         h = apply_norm(cfg, sparams["final_norm"], h)
-        return _logits(cfg, sparams, h[:, -1:])[:, 0], k_pages, v_pages
-    return h, k_pages, v_pages
+        return (_logits(cfg, sparams, h[:, -1:])[:, 0], k_pages, v_pages,
+                k_scales, v_scales)
+    return h, k_pages, v_pages, k_scales, v_scales
 
 
 def stage_decode_paged(cfg: ModelConfig, sparams, layers: LayerRange, tok,
                        h_in, row_start, caches, cache_pos, k_pages, v_pages,
-                       tables, *, interpret: bool = False):
+                       tables, *, k_scales=None, v_scales=None,
+                       interpret: bool = False):
     """Paged analogue of ``stage_decode``: paged blocks run the Pallas
     paged_attention kernel over their block-table row; other blocks use their
     dense fallback caches.  Returns ``(h_out, logits | None, new_caches,
-    k_pages, v_pages)``."""
+    k_pages, v_pages, k_scales, v_scales)``."""
     positions = cache_pos[:, None]
     if layers.start == 0:
         emb = _embed(cfg, sparams, tok[:, None], positions)
@@ -245,8 +249,9 @@ def stage_decode_paged(cfg: ModelConfig, sparams, layers: LayerRange, tok,
     for (l, b), p, c in zip(stage_blocks(cfg, layers), sparams["blocks"],
                             caches):
         if is_paged_block(cfg, b):
-            h_new, k_pages, v_pages = _block_decode_paged(
-                cfg, p, h, k_pages, v_pages, tables[li], cache_pos, interpret)
+            h_new, k_pages, v_pages, k_scales, v_scales = _block_decode_paged(
+                cfg, p, h, k_pages, v_pages, k_scales, v_scales, tables[li],
+                cache_pos, interpret)
             nc: Any = {}
             li += 1
         else:
@@ -257,34 +262,53 @@ def stage_decode_paged(cfg: ModelConfig, sparams, layers: LayerRange, tok,
     if layers.end == cfg.num_layers:
         hn = apply_norm(cfg, sparams["final_norm"], h)
         logits = _logits(cfg, sparams, hn)[:, 0]
-    return h, logits, new_caches, k_pages, v_pages
+    return h, logits, new_caches, k_pages, v_pages, k_scales, v_scales
 
 
 def stage_absorb_dense_prefill(cfg: ModelConfig, layers: LayerRange, caches,
                                k_pages, v_pages, table, slot: int,
-                               seq_len: int, page: int):
+                               seq_len: int, page: int, *, k_scales=None,
+                               v_scales=None):
     """Move a single-request dense stage prefill's GQA K/V into the pool.
 
     Hybrid slices prefill single-shot with ``stage_prefill`` (correct at any
     prompt length), then scatter each paged block's K/V into this slot's
     pages and drop those leaves (replaced by ``{}``).  table: host
-    (n_local_paged, max_batch, NP) int32.  Returns (caches', k_pages,
-    v_pages)."""
+    (n_local_paged, max_batch, NP) int32.  Int8 pools quantize each
+    destination page exactly once.  Returns (caches', k_pages, v_pages,
+    k_scales, v_scales)."""
     import numpy as np
 
     pos = np.arange(seq_len)
     blk, off = pos // page, jnp.asarray(pos % page)
+    nblk = -(-seq_len // page)
     out: List = []
     li = 0
     for (l, b), c in zip(stage_blocks(cfg, layers), caches):
         if not is_paged_block(cfg, b):
             out.append(c)
             continue
-        pids = jnp.asarray(table[li, slot, blk])
-        k_pages = k_pages.at[pids, off].set(
-            c["k"][0, :seq_len].astype(k_pages.dtype))
-        v_pages = v_pages.at[pids, off].set(
-            c["v"][0, :seq_len].astype(v_pages.dtype))
+        if k_scales is not None:
+            from ..kernels.paged_attention import quantize_kv_pages
+            pids = jnp.asarray(table[li, slot, :nblk])
+            pad = nblk * page - seq_len
+            KH, D = c["k"].shape[-2:]
+            kb = jnp.pad(c["k"][0, :seq_len].astype(jnp.float32),
+                         ((0, pad), (0, 0), (0, 0)))
+            vb = jnp.pad(c["v"][0, :seq_len].astype(jnp.float32),
+                         ((0, pad), (0, 0), (0, 0)))
+            kq, ks = quantize_kv_pages(kb.reshape(nblk, page, KH, D))
+            vq, vs = quantize_kv_pages(vb.reshape(nblk, page, KH, D))
+            k_pages = k_pages.at[pids].set(kq)
+            v_pages = v_pages.at[pids].set(vq)
+            k_scales = k_scales.at[pids].set(ks)
+            v_scales = v_scales.at[pids].set(vs)
+        else:
+            pids = jnp.asarray(table[li, slot, blk])
+            k_pages = k_pages.at[pids, off].set(
+                c["k"][0, :seq_len].astype(k_pages.dtype))
+            v_pages = v_pages.at[pids, off].set(
+                c["v"][0, :seq_len].astype(v_pages.dtype))
         out.append({})
         li += 1
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales

@@ -1,7 +1,7 @@
 """Serving engines: continuous batching over (partial) layer stacks."""
 from .engine import Engine, EngineConfig, PagedEngine, Request
 from .kv_pool import (PagePool, PoolExhausted, full_rectangle_pages,
-                      pages_for_vram)
+                      page_bytes, pages_for_vram)
 from .runtime import ClusterRuntime, InProcessTransport, Transport
 from .sampling import sample_token
 from .stage_engine import (DecodeItem, DecodeOut, PagedStageEngine,

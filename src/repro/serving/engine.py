@@ -247,6 +247,7 @@ class PagedEngine(_EngineBase):
 
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  *, num_pages: Optional[int] = None, page_size: int = 16,
+                 kv_dtype: Optional[str] = None,
                  interpret: Optional[bool] = None, rng_seed: int = 0):
         super().__init__(cfg, params, engine_cfg, rng_seed)
         if interpret is None:
@@ -261,27 +262,33 @@ class PagedEngine(_EngineBase):
                                              max_len=ec.max_len,
                                              page_size=page_size)
         self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
-                             max_batch=ec.max_batch, max_seq_len=ec.max_len)
+                             max_batch=ec.max_batch, max_seq_len=ec.max_len,
+                             kv_dtype=kv_dtype)
         self.caches = init_caches_paged(cfg, ec.max_batch, ec.max_len)
         self._all_paged = all_blocks_paged(cfg)
         self._n_pro, self._n_pp = paged_layer_counts(cfg)
         self._order = np.full((ec.max_batch,), -1, np.int64)
         self._admit_seq = 0
 
-        # donate the pool buffers so decode updates them in place — without
-        # this a VRAM-sized pool needs 2x its bytes at every step (donation
-        # is a no-op on CPU and would only warn there)
+        # donate the pool buffers (pages + int8 scales) so decode updates
+        # them in place — without this a VRAM-sized pool needs 2x its bytes
+        # at every step (donation is a no-op on CPU and would only warn
+        # there; donating the None scale pytrees of a bf16 pool is harmless)
         on_cpu = jax.default_backend() == "cpu"
         self._decode = jax.jit(
-            lambda params, tok, caches, pos, kp, vp, tp, ts:
+            lambda params, tok, caches, pos, kp, vp, ks, vs, tp, ts:
             decode_step_paged(cfg, params, tok, caches, pos, kp, vp, tp, ts,
-                              interpret=interpret),
-            donate_argnums=() if on_cpu else (4, 5))
+                              k_scales=ks, v_scales=vs, interpret=interpret),
+            donate_argnums=() if on_cpu else (4, 5, 6, 7))
         if self._all_paged:
+            def _chunk(params, tok, start, kp, vp, ks, vs, tp, ts, *,
+                       n_act: int):
+                return prefill_chunk_paged(cfg, params, tok, start, kp, vp,
+                                           tp, ts, k_scales=ks, v_scales=vs,
+                                           active_blocks=n_act)
             self._prefill_chunk = jax.jit(
-                lambda params, tok, start, kp, vp, tp, ts:
-                prefill_chunk_paged(cfg, params, tok, start, kp, vp, tp, ts),
-                donate_argnums=() if on_cpu else (3, 4))
+                _chunk, static_argnames=("n_act",),
+                donate_argnums=() if on_cpu else (3, 4, 5, 6))
         else:
             self._prefill_one = jax.jit(
                 lambda params, tok: prefill(cfg, params, tok,
@@ -316,6 +323,7 @@ class PagedEngine(_EngineBase):
             prompt = np.concatenate(
                 [prompt, np.asarray(req.output[:-1], np.int32)])
         S = len(prompt)
+        pool = self.pool
         if self._all_paged:
             # chunked prefill: no truncation at any length, pages appended
             # ahead of admission (ensure() already allocated them)
@@ -323,18 +331,24 @@ class PagedEngine(_EngineBase):
             for off in range(0, S, chunk):
                 tok = jnp.asarray(prompt[off:off + chunk])[None, :]
                 tp, ts = self._tables(slot)
-                logits, self.pool.k, self.pool.v = self._prefill_chunk(
+                n_act = _active_blocks_bucket(off + len(prompt[off:off + chunk]),
+                                              pool.page, pool.blocks_per_seq)
+                (logits, pool.k, pool.v, pool.k_scales,
+                 pool.v_scales) = self._prefill_chunk(
                     self.params, tok, jnp.asarray([off], jnp.int32),
-                    self.pool.k, self.pool.v, tp, ts)
+                    pool.k, pool.v, pool.k_scales, pool.v_scales, tp, ts,
+                    n_act=n_act)
             return np.asarray(logits)[0]
         # hybrid stack: single-shot dense prefill (correct at any prompt
         # length), then move GQA K/V into pages and splice the dense
         # fallback caches (MLA/SSM/...) into this slot
         tok = jnp.asarray(prompt)[None, :]
         logits, caches1 = self._prefill_one(self.params, tok)
-        caches1, self.pool.k, self.pool.v = absorb_dense_prefill(
-            self.cfg, caches1, self.pool.k, self.pool.v, self.pool.table,
-            slot, S, self.pool.page)
+        (caches1, pool.k, pool.v, pool.k_scales,
+         pool.v_scales) = absorb_dense_prefill(
+            self.cfg, caches1, pool.k, pool.v, pool.table,
+            slot, S, pool.page, k_scales=pool.k_scales,
+            v_scales=pool.v_scales)
         self.caches = jax.tree.map(
             lambda full, one: _splice_slot(full, one, slot),
             self.caches, caches1)
@@ -417,15 +431,31 @@ class PagedEngine(_EngineBase):
         if not self.active.any():
             return 0
         tp, ts = self._tables()
-        logits, self.caches, self.pool.k, self.pool.v = self._decode(
+        pool = self.pool
+        (logits, self.caches, pool.k, pool.v, pool.k_scales,
+         pool.v_scales) = self._decode(
             self.params, jnp.asarray(self.tokens), self.caches,
-            jnp.asarray(self.positions), self.pool.k, self.pool.v, tp, ts)
+            jnp.asarray(self.positions), pool.k, pool.v, pool.k_scales,
+            pool.v_scales, tp, ts)
         return self._sample_slots(np.asarray(logits))
 
     def _retire(self, slot: int, req: Request, reason: str) -> None:
         self.pool.release(slot)
         self._order[slot] = -1
         self._finish(slot, req, reason)
+
+
+def _active_blocks_bucket(tokens_through: int, page: int,
+                          blocks_per_seq: int) -> int:
+    """Static gather cap for a prefill chunk ending at ``tokens_through``:
+    the next power of two >= ceil(tokens/page), clamped to the per-seq
+    budget — bounds distinct jit specializations to log2(NP) while keeping
+    short prompts from materializing the whole rectangle."""
+    need = -(-tokens_through // page)
+    b = 1
+    while b < need:
+        b <<= 1
+    return min(b, blocks_per_seq)
 
 
 def _splice_slot(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:

@@ -7,31 +7,45 @@ logical sequence block costs ``num_paged_layers`` physical pages.  Page 0 is
 a scratch page: empty block-table entries point at it, so inactive batch
 slots write/read it harmlessly inside the jitted decode step.
 
-Pool-sizing math (see ``pages_for_vram``):
+Pool-sizing math (see ``pages_for_vram``), per KV dtype:
 
-    | quantity              | formula                                       |
-    |-----------------------|-----------------------------------------------|
-    | page_bytes            | 2 (K+V) * page_size * kv_heads * head_dim * b |
+    | quantity             | param dtype (bf16)        | kv_dtype="int8"     |
+    |----------------------|---------------------------|---------------------|
+    | kv element bytes     | 2                         | 1                   |
+    | page_bytes           | 2 * page * KH * D * 2     | 2 * page * KH * D   |
+    | scale_bytes / page   | 0                         | 2 * KH * 4 (f32)    |
+    | num_pages            | pool_bytes // page_bytes  | pool_bytes //       |
+    |                      |                           |  (page_bytes        |
+    |                      |                           |   + scale_bytes)    |
+    | token capacity       | (num_pages - 1) * page / n_paged_layers         |
+
+plus the dtype-independent rows:
+
     | param_bytes (node)    | param_count * b * layers_on_node / num_layers |
     | pool bytes available  | vram_bytes - param_bytes                      |
-    | num_pages             | pool_bytes // page_bytes                      |
-    | token capacity        | (num_pages - 1) * page_size / n_paged_layers  |
     | per-seq budget (NP)   | ceil(max_seq_len / page_size) blocks          |
     | min viable pool       | 1 + NP * n_paged_layers pages                 |
 
-where ``b`` is bytes per element (2 for bfloat16).  Unlike the dense engine's
-``max_batch * max_len`` rectangle, capacity is shared: many short sequences
-or a few long ones fit the same pool, which is exactly the asymmetric-memory
-slack Helix's placement exploits on heterogeneous nodes.
+With ``kv_dtype="int8"`` a page stores int8 elements plus one float32 absmax
+scale per (page, kv_head) for K and V each, so page cost drops from
+``4*page*KH*D`` bytes (K+V bf16) to ``2*page*KH*D + 8*KH`` — ≈2× the token
+capacity at fixed VRAM (the scale overhead is ``4 / page_size`` of a percent
+per element).  Unlike the dense engine's ``max_batch * max_len`` rectangle,
+capacity is shared: many short sequences or a few long ones fit the same
+pool, which is exactly the asymmetric-memory slack Helix's placement
+exploits on heterogeneous nodes.
 
 Allocation is on-demand (a block per ``page_size`` tokens, across layers),
 freed on request completion/preemption; admission control blocks new
 requests — and decode preempts the newest running request — when the pool is
-exhausted, instead of overflowing.
+exhausted, instead of overflowing.  The free list is a preallocated numpy
+stack: growing a slot by ``n`` blocks is one vectorized slice pop covering
+all ``n * num_layers`` pages (``alloc_ops`` counts these bulk operations,
+not pages — tests pin the O(1) behaviour).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -49,15 +63,18 @@ class PagePool:
 
     Device arrays ``k``/``v`` have shape (num_pages, page_size, kv_heads,
     head_dim) and are updated functionally by the jitted model steps (the
-    engine stores the returned arrays back).  The block table is a host
-    ``(num_paged_layers, max_batch, blocks_per_seq)`` int32 array; row order
-    is prologue layers first, then pattern positions repeat-major, matching
-    ``models.paged`` layer numbering.
+    engine stores the returned arrays back).  With ``kv_dtype="int8"`` they
+    are int8 and ``k_scales``/``v_scales`` hold the (num_pages, kv_heads)
+    float32 per-page absmax scales (None otherwise).  The block table is a
+    host ``(num_paged_layers, max_batch, blocks_per_seq)`` int32 array; row
+    order is prologue layers first, then pattern positions repeat-major,
+    matching ``models.paged`` layer numbering.
     """
 
     def __init__(self, cfg: ModelConfig, *, num_pages: int, page_size: int,
                  max_batch: int, max_seq_len: int, dtype=None,
-                 paged_layers: Optional[int] = None):
+                 paged_layers: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.cfg = cfg
         self.page = page_size
         # a stage engine's pool covers only the node's layer slice: pass the
@@ -75,15 +92,31 @@ class PagePool:
                 f"pool of {num_pages} pages cannot hold one full request: "
                 f"need >= {min_pages} (1 scratch + {self.blocks_per_seq} "
                 f"blocks x {self.num_layers} layers)")
-        if dtype is None:
-            dtype = {"bfloat16": jnp.bfloat16,
-                     "float32": jnp.float32}[cfg.param_dtype]
+        if kv_dtype not in (None, "param", "int8"):
+            raise ValueError(f"kv_dtype must be 'param' or 'int8', "
+                             f"got {kv_dtype!r}")
+        self.kv_dtype = "int8" if kv_dtype == "int8" else "param"
+        self.quantized = self.kv_dtype == "int8"
         kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        if self.quantized:
+            dtype = jnp.int8
+            self.k_scales = jnp.zeros((num_pages, kh), jnp.float32)
+            self.v_scales = jnp.zeros((num_pages, kh), jnp.float32)
+        else:
+            if dtype is None:
+                dtype = {"bfloat16": jnp.bfloat16,
+                         "float32": jnp.float32}[cfg.param_dtype]
+            self.k_scales = None
+            self.v_scales = None
         self.num_pages = num_pages
         self.k = jnp.zeros((num_pages, page_size, kh, hd), dtype)
         self.v = jnp.zeros((num_pages, page_size, kh, hd), dtype)
-        # page 0 reserved as scratch; free list is a stack of page ids
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        # page 0 reserved as scratch; the free list is a preallocated stack
+        # whose live region is _free[:_free_top] (top of stack at the end,
+        # matching the old list.pop() order: page 1 first, then 2, ...)
+        self._free = np.arange(num_pages - 1, 0, -1, dtype=np.int32)
+        self._free_top = num_pages - 1
+        self.alloc_ops = 0          # bulk ensure/release ops (not pages)
         self.table = np.zeros((self.num_layers, max_batch,
                                self.blocks_per_seq), np.int32)
         self._nblocks = np.zeros((max_batch,), np.int64)
@@ -92,7 +125,7 @@ class PagePool:
     @property
     def used(self) -> int:
         """Pages currently allocated (scratch page excluded)."""
-        return (self.num_pages - 1) - len(self._free)
+        return (self.num_pages - 1) - self._free_top
 
     @property
     def tokens_used(self) -> int:
@@ -113,7 +146,7 @@ class PagePool:
         return max(0, blocks) * self.num_layers
 
     def can_fit(self, slot: int, tokens: int) -> bool:
-        return self.pages_needed(slot, tokens) <= len(self._free)
+        return self.pages_needed(slot, tokens) <= self._free_top
 
     def ensure(self, slot: int, tokens: int) -> bool:
         """Grow ``slot``'s allocation to hold ``tokens``.  Returns False if
@@ -124,7 +157,10 @@ class PagePool:
         calls it on every stage node when it *launches* a decode pass, so by
         the time the token reaches a mid-pipeline node its block is already
         held — allocated blocks can only be taken back by release or
-        preemption, never by another request's growth."""
+        preemption, never by another request's growth.
+
+        One call is one batched pop from the free-list stack no matter how
+        many blocks x layers it covers."""
         target = -(-tokens // self.page)
         if target > self.blocks_per_seq:
             raise PoolExhausted(
@@ -132,18 +168,32 @@ class PagePool:
                 f"{self.blocks_per_seq * self.page}")
         if not self.can_fit(slot, tokens):
             return False
-        while self._nblocks[slot] < target:
-            j = int(self._nblocks[slot])
-            for li in range(self.num_layers):
-                self.table[li, slot, j] = self._free.pop()
-            self._nblocks[slot] += 1
+        j0 = int(self._nblocks[slot])
+        grow = target - j0
+        if grow <= 0:
+            return True
+        n = grow * self.num_layers
+        # stack pop order matches the old per-page loop: layer index fastest,
+        # block index outer — popped[i] is the i-th page the loop would take
+        popped = self._free[self._free_top - n:self._free_top][::-1]
+        self._free_top -= n
+        self.table[:, slot, j0:j0 + grow] = \
+            popped.reshape(grow, self.num_layers).T
+        self._nblocks[slot] = target
+        self.alloc_ops += 1
         return True
 
     def release(self, slot: int) -> None:
-        """Return all of ``slot``'s pages to the free list."""
-        for j in range(int(self._nblocks[slot])):
-            for li in range(self.num_layers):
-                self._free.append(int(self.table[li, slot, j]))
+        """Return all of ``slot``'s pages to the free list (one batched
+        push)."""
+        nb = int(self._nblocks[slot])
+        if nb:
+            n = nb * self.num_layers
+            # push order matches the old loop: block outer, layer fastest
+            self._free[self._free_top:self._free_top + n] = \
+                self.table[:, slot, :nb].T.reshape(-1)
+            self._free_top += n
+            self.alloc_ops += 1
         self.table[:, slot, :] = 0
         self._nblocks[slot] = 0
 
@@ -154,27 +204,43 @@ def full_rectangle_pages(cfg: ModelConfig, *, max_batch: int, max_len: int,
     """Pages for a dense-equivalent full allocation — every slot holding its
     whole ``max_len`` budget — plus the scratch page.  Pools this size can
     never block or preempt; smaller pools oversubscribe.  ``paged_layers``
-    overrides the model-wide paged-block count for stage-slice pools."""
+    overrides the model-wide paged-block count for stage-slice pools.
+    (Page *counts* are dtype-independent — int8 shrinks page_bytes, not the
+    block math.)"""
     blocks = -(-max_len // page_size)
     layers = paged_layers if paged_layers is not None \
         else num_paged_layers(cfg)
     return 1 + blocks * layers * max_batch
 
 
+def page_bytes(cfg: ModelConfig, page_size: int,
+               kv_dtype: Optional[str] = None) -> float:
+    """Bytes one pool page costs (K + V + int8 scale rows, if any)."""
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kv_dtype == "int8":
+        return 2 * page_size * kh * hd * 1 + 2 * kh * 4
+    elt = {"bfloat16": 2, "float32": 4}[cfg.param_dtype]
+    return 2 * page_size * kh * hd * elt
+
+
 def pages_for_vram(cfg: ModelConfig, vram_bytes: float, *, page_size: int,
                    layers_on_node: Optional[int] = None,
-                   max_pages: Optional[int] = None) -> int:
+                   max_pages: Optional[int] = None,
+                   kv_dtype: Optional[str] = None) -> int:
     """Size a pool from node VRAM the way ``sim.Simulator`` sizes its KV
     capacity: whatever VRAM the node's parameter slice does not use becomes
     pages.  ``layers_on_node`` is the Helix layer-slice size (defaults to the
     whole model); ``max_pages`` caps the result (useful for smoke models
-    whose tiny pages would otherwise number in the millions)."""
+    whose tiny pages would otherwise number in the millions).
+    ``kv_dtype="int8"`` halves the per-page cost (1-byte elements plus
+    ``2 * kv_heads * 4`` scale bytes per page) — ≈2x the pages from the same
+    VRAM."""
     elt = {"bfloat16": 2, "float32": 4}[cfg.param_dtype]
-    page_bytes = 2 * page_size * cfg.num_kv_heads * cfg.resolved_head_dim * elt
+    pb = page_bytes(cfg, page_size, kv_dtype)
     layers = layers_on_node if layers_on_node is not None else cfg.num_layers
     param_bytes = cfg.param_count() * elt * layers / max(cfg.num_layers, 1)
     free = max(0.0, vram_bytes - param_bytes)
-    pages = int(free // page_bytes)
+    pages = int(free // pb)
     if max_pages is not None:
         pages = min(pages, max_pages)
     return pages

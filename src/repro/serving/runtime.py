@@ -171,6 +171,7 @@ class ClusterRuntime:
 
     def __init__(self, cfg: ModelConfig, params, plan, engine_cfg: EngineConfig,
                  *, paged: bool = True, page_size: int = 16,
+                 kv_dtype: Optional[str] = None,
                  pool_pages: Optional[Mapping[str, int]] = None,
                  transport: Optional[Transport] = None,
                  interpret: Optional[bool] = None, rng_seed: int = 0,
@@ -186,6 +187,7 @@ class ClusterRuntime:
         self.paged = paged
         self.max_inflight = max_inflight
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         self.pool_pages = dict(pool_pages or {})
         self.interpret = interpret
         self.rng_seed = rng_seed
@@ -246,7 +248,7 @@ class ClusterRuntime:
         if not self.paged or n_paged == 0:
             # hybrid models can hand a node an all-SSM/MLA slice with no
             # paged block at all — that node serves dense even in paged mode
-            return {"paged": False, "num_pages": None}
+            return {"paged": False, "num_pages": None, "kv_dtype": None}
         rect = full_rectangle_pages(self.cfg, max_batch=self.ec.max_batch,
                                     max_len=self.ec.max_len,
                                     page_size=self.page_size,
@@ -254,15 +256,18 @@ class ClusterRuntime:
         if node in self.pool_pages:
             pages = self.pool_pages[node]
         else:
+            # int8 pages cost ~half the bytes, so the same VRAM yields ~2x
+            # the pages (still capped at the full rectangle)
             pages = pages_for_vram(self.cfg,
                                    self.cluster.nodes[node].vram_bytes,
                                    page_size=self.page_size,
                                    layers_on_node=rng.num_layers,
-                                   max_pages=rect)
+                                   max_pages=rect,
+                                   kv_dtype=self.kv_dtype)
             # floor: one full-budget request must always fit
             blocks = -(-self.ec.max_len // self.page_size)
             pages = max(pages, 1 + blocks * n_paged)
-        return {"paged": True, "num_pages": pages}
+        return {"paged": True, "num_pages": pages, "kv_dtype": self.kv_dtype}
 
     def _make_engine(self, node: str, rng: LayerRange):
         if self._engine_factory is not None:
@@ -274,6 +279,7 @@ class ClusterRuntime:
         return PagedStageEngine(self.cfg, self.params, rng, self.ec,
                                 num_pages=spec["num_pages"],
                                 page_size=self.page_size,
+                                kv_dtype=spec["kv_dtype"],
                                 interpret=self.interpret,
                                 rng_seed=self.rng_seed)
 
@@ -942,8 +948,8 @@ class ClusterRuntime:
                 "node": node, "cfg": cfg_wire, "ec": ec_wire,
                 "layers": (rng.start, rng.end), "params": params_np,
                 "paged": spec["paged"], "num_pages": spec["num_pages"],
-                "page_size": rt.page_size, "interpret": rt.interpret,
-                "rng_seed": rt.rng_seed})
+                "page_size": rt.page_size, "kv_dtype": spec["kv_dtype"],
+                "interpret": rt.interpret, "rng_seed": rt.rng_seed})
             return RemoteStageEngine(ch, node, rng_seed=rt.rng_seed)
 
         rt = cls(cfg, params, plan, engine_cfg, transport=transport,

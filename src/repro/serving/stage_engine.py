@@ -43,7 +43,7 @@ from ..models.stage import (stage_absorb_dense_prefill, stage_cache_init,
                             stage_decode_paged, stage_num_paged_layers,
                             stage_params, stage_prefill,
                             stage_prefill_chunk_paged)
-from .engine import EngineConfig
+from .engine import EngineConfig, _active_blocks_bucket
 from .kv_pool import PagePool, full_rectangle_pages
 from .sampling import sample_token
 
@@ -229,8 +229,8 @@ class PagedStageEngine(_StageEngineBase):
 
     def __init__(self, cfg: ModelConfig, params, layers: LayerRange,
                  engine_cfg: EngineConfig, *, num_pages: Optional[int] = None,
-                 page_size: int = 16, interpret: Optional[bool] = None,
-                 rng_seed: int = 0):
+                 page_size: int = 16, kv_dtype: Optional[str] = None,
+                 interpret: Optional[bool] = None, rng_seed: int = 0):
         super().__init__(cfg, params, layers, engine_cfg, rng_seed)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -250,35 +250,38 @@ class PagedStageEngine(_StageEngineBase):
         # for the real max_batch; the extra table column stays on page 0
         self.pool = PagePool(cfg, num_pages=num_pages, page_size=page_size,
                              max_batch=ec.max_batch + 1, max_seq_len=ec.max_len,
-                             paged_layers=self.n_paged)
+                             paged_layers=self.n_paged, kv_dtype=kv_dtype)
         self.caches = stage_cache_init_paged(cfg, layers, ec.max_batch + 1,
                                              ec.max_len)
         on_cpu = jax.default_backend() == "cpu"
         if self._chunked:
+            def _chunk(sp, x, entry, start, kp, vp, ks, vs, tb, *,
+                       n_act: int):
+                return stage_prefill_chunk_paged(
+                    cfg, sp, layers, x, entry, start, kp, vp, tb,
+                    k_scales=ks, v_scales=vs, active_blocks=n_act)
             self._prefill_chunk = jax.jit(
-                lambda sp, x, entry, start, kp, vp, tb:
-                stage_prefill_chunk_paged(cfg, sp, layers, x, entry, start,
-                                          kp, vp, tb),
-                static_argnums=(2,),
-                donate_argnums=() if on_cpu else (4, 5))
+                _chunk, static_argnums=(2,), static_argnames=("n_act",),
+                donate_argnums=() if on_cpu else (4, 5, 6, 7))
         else:
             self._prefill_one = jax.jit(
                 lambda sp, x, entry: stage_prefill(cfg, sp, layers, x, entry,
                                                    max_len=ec.max_len),
                 static_argnums=(2,))
 
-        def decode_fn(sp, caches, tok, h_in, entry, pos, idx, kp, vp, tables):
+        def decode_fn(sp, caches, tok, h_in, entry, pos, idx, kp, vp, ks, vs,
+                      tables):
             cg = jax.tree.map(lambda c: c[idx], caches)
             tb = tables[:, idx]
-            h, logits, nc, kp, vp = stage_decode_paged(
+            h, logits, nc, kp, vp, ks, vs = stage_decode_paged(
                 cfg, sp, layers, tok, h_in, entry, cg, pos, kp, vp, tb,
-                interpret=interpret)
+                k_scales=ks, v_scales=vs, interpret=interpret)
             new = jax.tree.map(lambda full, n: full.at[idx].set(n),
                                caches, nc)
-            return h, logits, new, kp, vp
+            return h, logits, new, kp, vp, ks, vs
 
         self._decode = jax.jit(decode_fn,
-                               donate_argnums=() if on_cpu else (7, 8))
+                               donate_argnums=() if on_cpu else (7, 8, 9, 10))
 
     # -- pool ------------------------------------------------------------
     def ensure(self, slot: int, tokens: int) -> bool:
@@ -303,10 +306,16 @@ class PagedStageEngine(_StageEngineBase):
             xin = jnp.asarray(np.asarray(x, np.int32))[None, :]
         else:
             xin = jnp.asarray(x)
+        C = xin.shape[1]
         tb = jnp.asarray(self.pool.table[:, slot:slot + 1])
-        out, self.pool.k, self.pool.v = self._prefill_chunk(
-            self.sparams, xin, entry, jnp.asarray([start], jnp.int32),
-            self.pool.k, self.pool.v, tb)
+        n_act = _active_blocks_bucket(start + C, self.pool.page,
+                                      self.pool.blocks_per_seq)
+        pool = self.pool
+        out, pool.k, pool.v, pool.k_scales, pool.v_scales = \
+            self._prefill_chunk(
+                self.sparams, xin, entry, jnp.asarray([start], jnp.int32),
+                pool.k, pool.v, pool.k_scales, pool.v_scales, tb,
+                n_act=n_act)
         return np.asarray(out)[0] if self.is_last else np.asarray(out)
 
     def prefill_stage(self, slot: int, x, entry: int):
@@ -322,9 +331,12 @@ class PagedStageEngine(_StageEngineBase):
             S = x.shape[1]
             xin = jnp.asarray(x)
         out, caches1 = self._prefill_one(self.sparams, xin, entry)
-        caches1, self.pool.k, self.pool.v = stage_absorb_dense_prefill(
-            self.cfg, self.layers, caches1, self.pool.k, self.pool.v,
-            self.pool.table, slot, S, self.pool.page)
+        pool = self.pool
+        caches1, pool.k, pool.v, pool.k_scales, pool.v_scales = \
+            stage_absorb_dense_prefill(
+                self.cfg, self.layers, caches1, pool.k, pool.v,
+                pool.table, slot, S, pool.page,
+                k_scales=pool.k_scales, v_scales=pool.v_scales)
         self.caches = jax.tree.map(
             lambda full, one: _splice(full, one, slot), self.caches, caches1)
         return np.asarray(out)[0] if self.is_last else np.asarray(out)
@@ -333,9 +345,11 @@ class PagedStageEngine(_StageEngineBase):
     def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
         idx, tok, pos, entry, h_in = self._assemble(items)
         tables = jnp.asarray(self.pool.table)
-        h, logits, self.caches, self.pool.k, self.pool.v = self._decode(
+        pool = self.pool
+        (h, logits, self.caches, pool.k, pool.v,
+         pool.k_scales, pool.v_scales) = self._decode(
             self.sparams, self.caches, tok, h_in, entry, pos, idx,
-            self.pool.k, self.pool.v, tables)
+            pool.k, pool.v, pool.k_scales, pool.v_scales, tables)
         return self._emit(items, h, logits)
 
 
@@ -346,5 +360,6 @@ def make_stage_engine(cfg: ModelConfig, params, layers: LayerRange,
         return PagedStageEngine(cfg, params, layers, engine_cfg, **kw)
     kw.pop("num_pages", None)
     kw.pop("page_size", None)
+    kw.pop("kv_dtype", None)
     kw.pop("interpret", None)
     return StageEngine(cfg, params, layers, engine_cfg, **kw)

@@ -196,6 +196,11 @@ class Simulator:
             rate = cluster.node_token_throughput(name, model, rng.num_layers)
             vram = cluster.nodes[name].vram_bytes
             free = max(0.0, vram - rng.num_layers * model.layer_param_bytes)
+            # kv_bytes_per_token_layer carries the KV storage dtype: a
+            # profile built with kv_dtype="int8" (1-byte pages + amortized
+            # absmax scales) roughly doubles every node's token capacity
+            # here, matching what serving.kv_pool.pages_for_vram gives the
+            # real engines
             per_tok = model.kv_bytes_per_token_layer * rng.num_layers
             kv_cap = free / per_tok if per_tok > 0 else float("inf")
             self.nodes[name] = NodeSim(name, rate, kv_cap,
