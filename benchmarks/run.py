@@ -28,7 +28,8 @@ def _register():
     from .fault_tables import bench_failover, bench_straggler
     from .placement_tables import bench_placement_deepdive
     from .scheduling_tables import bench_scheduling_deepdive
-    from .serving_tables import (bench_distributed_cluster,
+    from .serving_tables import (bench_direct_links,
+                                 bench_distributed_cluster,
                                  bench_high_heterogeneity,
                                  bench_kv_quant,
                                  bench_pipelined_decode,
@@ -39,6 +40,7 @@ def _register():
         "fig9e_heterogeneity": bench_high_heterogeneity,
         "pipelined_decode": bench_pipelined_decode,
         "kv_quant": bench_kv_quant,
+        "direct_links": bench_direct_links,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

@@ -172,3 +172,68 @@ def bench_kv_quant(quick: bool = False):
         "variable-context kernel must stream fewer pages than the dense grid"
     return {"capacity_ratio": ratio, "streamed": live_pages,
             "dense": dense_pages}
+
+
+def bench_direct_links(quick: bool = False):
+    """Routed worker-to-worker forwarding vs coordinator-star routing on a
+    delayed 3-stage mesh, measured on the REAL runtime (in-process
+    transport, virtual clock) with per-(src,dst) hop counters.
+
+    Star mode bounces every inter-stage frame through the coordinator, so
+    a k-stage pipeline pays 2k transport hops per decode token; direct
+    links pay k+1 (k-1 peer hops, plus the token's launch + return hops
+    which always touch the coordinator).  With per-link delay d the
+    per-token decode latency drops from 2k*d to (k+1)*d."""
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core import (LayerRange, ModelProfile, Placement,
+                            full_mesh_cluster, plan)
+    from repro.models import init
+    from repro.serving import (ClusterRuntime, EngineConfig,
+                               InProcessTransport, Request)
+
+    cfg = dataclasses.replace(get_smoke_config("smollm_360m"),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    profile = ModelProfile.from_dims(
+        cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
+        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    k = 3
+    placement = Placement({"n0": LayerRange(0, 2), "n1": LayerRange(2, 3),
+                           "n2": LayerRange(3, 4)}, cfg.num_layers)
+    cluster = full_mesh_cluster(k, latency_s=2e-3)
+    p = plan(cluster, profile, placement=placement)
+    params = init(cfg, jax.random.key(0))
+    ec = EngineConfig(max_batch=4, max_len=48, prompt_len=16)
+    rng = np.random.RandomState(0)
+    n_req, new_tokens = (2, 4) if quick else (4, 6)
+    d = 2e-3
+    rows = {}
+    for mode, direct in (("star", False), ("direct", True)):
+        t0 = time.time()
+        tr = InProcessTransport(default_delay_s=d, direct_links=direct)
+        rt = ClusterRuntime(cfg, params, p, ec, paged=True, transport=tr)
+        reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(10,)),
+                        max_new_tokens=new_tokens) for i in range(n_req)]
+        for r in reqs:
+            rt.submit(r)
+        rt.run_until_done()
+        wall = time.time() - t0
+        n_tokens = sum(len(r.output) for r in reqs)
+        hops = sum(tr.transfers.values()) / max(n_tokens, 1)
+        lat = rt.mean_decode_latency()
+        rows[mode] = {"hops_per_token": hops, "decode_lat_s": lat}
+        emit(f"direct_links_3stage_{mode}_hops_per_token", wall,
+             f"{hops:.2f}")
+        emit(f"direct_links_3stage_{mode}_decode_lat_s", 0.0, f"{lat:.4f}")
+    emit("direct_links_3stage_hop_ratio", 0.0,
+         f"{rows['star']['hops_per_token'] / rows['direct']['hops_per_token']:.2f}")
+    assert rows["star"]["hops_per_token"] == 2 * k, rows
+    assert rows["direct"]["hops_per_token"] == k + 1, rows
+    assert rows["direct"]["decode_lat_s"] < rows["star"]["decode_lat_s"]
+    return rows

@@ -27,7 +27,8 @@ import numpy as np
 import jax
 
 from repro.configs import get_smoke_config
-from repro.core import (MILPOptions, ModelProfile, make_serving_cluster, plan)
+from repro.core import (LayerRange, MILPOptions, ModelProfile,
+                        disaggregated_placement, make_serving_cluster, plan)
 from repro.models import init
 from repro.serving import (ClusterRuntime, Engine, EngineConfig,
                            InProcessTransport, Request)
@@ -56,6 +57,15 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=["param", "int8"], default="param",
                     help="KV page storage on paged stage engines; int8 "
                          "quantizes pages for ~2x pool capacity")
+    ap.add_argument("--direct-links", action="store_true",
+                    help="route stage outputs worker-to-worker (socket: "
+                         "real peer TCP links; inproc: modelled) instead "
+                         "of bouncing every frame through the coordinator")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split the cluster into a prefill replica (first "
+                         "node, full model) and a decode replica (remaining "
+                         "nodes, even contiguous split); prompt KV ships "
+                         "prefill -> decode over the transport")
     ap.add_argument("--check", action="store_true",
                     help="verify against one full engine: token-for-token "
                          "for param-dtype KV, tolerance (majority token "
@@ -73,12 +83,28 @@ def main() -> None:
         cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
     cluster = make_serving_cluster(profile, force_stages=args.force_stages)
 
-    print("planning placement ...")
-    p = plan(cluster, profile, MILPOptions(time_limit_s=10.0, lns_rounds=0,
-                                           fgls_rounds=20))
+    if args.disaggregate:
+        names = sorted(cluster.nodes)
+        if len(names) < 2:
+            raise SystemExit("--disaggregate needs >= 2 nodes")
+        dec = names[1:]
+        L = cfg.num_layers
+        bounds = [round(i * L / len(dec)) for i in range(len(dec) + 1)]
+        placement = disaggregated_placement(
+            {names[0]: LayerRange(0, L)},
+            {n: LayerRange(bounds[i], bounds[i + 1])
+             for i, n in enumerate(dec)}, L)
+        print("disaggregated placement (no MILP) ...")
+        p = plan(cluster, profile, placement=placement)
+    else:
+        print("planning placement ...")
+        p = plan(cluster, profile, MILPOptions(time_limit_s=10.0,
+                                               lns_rounds=0, fgls_rounds=20))
+    roles = p.placement.meta.get("roles", {})
     for node, rng in sorted(p.placement.assignment.items()):
+        role = f" role={roles[node]}" if roles else ""
         print(f"  {node}: layers [{rng.start}, {rng.end}) "
-              f"({cluster.nodes[node].device.name})")
+              f"({cluster.nodes[node].device.name}){role}")
 
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
@@ -88,9 +114,11 @@ def main() -> None:
                                           paged=not args.dense,
                                           kv_dtype=kv_dtype,
                                           max_inflight=args.max_inflight,
-                                          stall_timeout_s=120.0)
+                                          stall_timeout_s=120.0,
+                                          direct_links=args.direct_links)
     else:
-        transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3)
+        transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3,
+                                       direct_links=args.direct_links)
         rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
                             transport=transport, kv_dtype=kv_dtype,
                             max_inflight=args.max_inflight)
@@ -128,6 +156,9 @@ def main() -> None:
         print(f"mean decode latency (virtual clock, in-flight window "
               f"{args.max_inflight}): {rt.mean_decode_latency() * 1e3:.2f}ms"
               f"/token")
+    describe = getattr(rt.transport, "describe", None)
+    if callable(describe):
+        print(f"transport: {describe()}")
     for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.output}")
     assert done == len(reqs), "not all requests completed"

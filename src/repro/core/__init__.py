@@ -8,8 +8,9 @@ from .graph import (ClusterGraph, build_graph, compute_upper_bound,
                     connection_valid, placement_throughput)
 from .maxflow import FlowNetwork, max_flow, preflow_push
 from .milp import MILPOptions, PlacementResult, solve_placement
-from .placement import (LayerRange, Placement, petals_placement,
-                        separate_pipelines_placement, swarm_placement)
+from .placement import (LayerRange, Placement, disaggregated_placement,
+                        petals_placement, separate_pipelines_placement,
+                        swarm_placement)
 from .planner import Plan, plan, replan_after_failure, reweight_for_straggler
 from .scheduler import (IWRR, BaseScheduler, HelixScheduler, KVEstimator,
                         PipelineStage, RandomScheduler, RequestPipeline,

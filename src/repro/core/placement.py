@@ -63,6 +63,12 @@ class Placement:
         return sorted(n for n, r in self.assignment.items()
                       if r.start <= layer < r.end)
 
+    def roles(self) -> Dict[str, str]:
+        """Replica role per node (``prefill`` / ``decode`` / ``mixed``).
+        Placements without explicit roles treat every node as mixed."""
+        roles = (self.meta or {}).get("roles") or {}
+        return {n: roles.get(n, "mixed") for n in self.assignment}
+
     def layer_compute(self, cluster: ClusterSpec, model: ModelProfile) -> List[float]:
         """Tokens/s of capacity covering each layer (the min over layers is
         the classic pipeline-bottleneck metric from §3.1)."""
@@ -72,6 +78,40 @@ class Placement:
             for l in range(rng.start, rng.end):
                 out[l] += tput
         return out
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode (HexGen-2-style replica roles)
+# ---------------------------------------------------------------------------
+
+def disaggregated_placement(prefill: Mapping[str, LayerRange],
+                            decode: Mapping[str, LayerRange],
+                            num_layers: int) -> Placement:
+    """Build a placement split into prefill and decode replica groups.
+
+    Each group must cover ``[0, num_layers)`` on its own: prompt passes run
+    only on the prefill group, decode passes only on the decode group, and
+    the filled KV is handed from the former to the latter over a peer link.
+    A node listed in both groups (same range) becomes ``mixed`` — its KV is
+    already home, so no handoff is shipped for its layers.
+    """
+    assignment: Dict[str, LayerRange] = {}
+    roles: Dict[str, str] = {}
+    for group, role in ((prefill, "prefill"), (decode, "decode")):
+        for node, rng in group.items():
+            if node in assignment and assignment[node] != rng:
+                raise ValueError(
+                    f"{node} appears in both groups with conflicting "
+                    f"ranges {assignment[node]} vs {rng}")
+            assignment[node] = rng
+            roles[node] = "mixed" if node in roles else role
+    for name, group in (("prefill", prefill), ("decode", decode)):
+        sub = Placement(dict(group), num_layers)
+        bad = sub.validate()
+        if bad:
+            raise ValueError(f"{name} group does not cover the model: {bad}")
+    return Placement(assignment, num_layers,
+                     meta={"method": "disaggregated", "roles": roles})
 
 
 # ---------------------------------------------------------------------------

@@ -98,7 +98,8 @@ def run_cluster(cfg, args) -> None:
             cfg, params, p, ec, paged=args.paged or not args.dense,
             page_size=args.page_size, kv_dtype=kv_dtype,
             max_inflight=args.max_inflight,
-            connect=args.connect or None, stall_timeout_s=120.0)
+            connect=args.connect or None, stall_timeout_s=120.0,
+            direct_links=args.direct_links)
     else:
         rt = ClusterRuntime(cfg, params, p, ec,
                             paged=args.paged or not args.dense,
@@ -161,6 +162,11 @@ def main() -> None:
                          "wait for externally started workers (python -m "
                          "repro.launch.worker --connect HOST:PORT) instead "
                          "of spawning local subprocesses")
+    ap.add_argument("--direct-links", action="store_true",
+                    help="with --transport socket: stage workers forward "
+                         "activation frames to the next stage's worker over "
+                         "peer TCP links; only tokens return to the "
+                         "coordinator")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -13,7 +13,20 @@ derived from this node's VRAM — and builds the ``StageEngine`` /
                                activations) shipped by the SocketTransport;
                                a later engine call resolves the StagedRef
   prefill_stage / prefill_chunk / decode_stage / sample-side bookkeeping
-                               the stage-engine API, argument-for-argument
+                               the stage-engine API, argument-for-argument;
+                               each compute call accepts a trailing forward
+                               spec ``(dst_node, tag)`` — the worker pushes
+                               the output straight into the destination
+                               worker's staging area over a **peer channel**
+                               before replying, so the activation frame
+                               never rides back through the coordinator
+  export_kv / import_kv        KV handoff between prefill and decode
+                               replicas (disaggregated serving); export
+                               honours the same forward spec
+  peer_addr / set_peers        worker-to-worker wiring: ``peer_addr`` opens
+                               a lazy listening socket and returns its port;
+                               ``set_peers`` installs the routed topology
+                               ({node: (host, port)}) the forwards dial
   alloc_slot / free_slot / ensure / release / kv_tokens_* / pool_used
                                slot + KV bookkeeping the runtime's
                                admission and scheduler feedback use
@@ -25,21 +38,31 @@ derived from this node's VRAM — and builds the ``StageEngine`` /
 ``ClusterRuntime.spawn_workers`` launches one of these per placed node as a
 subprocess; for multi-host runs, start workers by hand on each machine and
 point them at the coordinator's ``--connect`` address.
+
+Concurrency: the coordinator connection and every accepted peer connection
+run their own frame loop against ONE shared ``StageWorker``; engine calls
+and staging are serialized by a worker lock.  Peer pushes happen *outside*
+that lock, so a worker waiting on a peer's ack never blocks the peer's own
+compute — and since forwards only ever point down the layer order (and
+prefill -> decode for KV handoffs), the forwarding graph is acyclic and
+cannot deadlock.
 """
 from __future__ import annotations
 
 import argparse
 import socket
+import threading
 import traceback
 from collections import OrderedDict
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 from ..configs.base import BlockSpec, ModelConfig
 from ..core.placement import LayerRange
 from ..serving.engine import EngineConfig
 from ..serving.stage_engine import DecodeItem, PagedStageEngine, StageEngine
-from ..serving.transport import (FrameError, StagedRef, decode_payload,
-                                 encode_payload, recv_frame, send_frame)
+from ..serving.transport import (FrameError, StagedRef, WorkerChannel,
+                                 WorkerDied, decode_payload, encode_payload,
+                                 recv_frame, send_frame)
 
 # staged payloads whose pass got cancelled (epoch bump) are never resolved;
 # cap the stash so they can't accumulate across a long-lived worker
@@ -55,12 +78,74 @@ def config_from_wire(d: Dict[str, Any]) -> ModelConfig:
 
 class StageWorker:
     """Owns one node's stage engine plus the staging area for in-flight
-    transport payloads."""
+    transport payloads, and (when the coordinator wires a routed topology)
+    the peer channels direct forwards travel over."""
 
     def __init__(self):
         self.engine = None
         self.staged: "OrderedDict[int, Any]" = OrderedDict()
         self.node = "?"
+        self._lock = threading.RLock()      # engine + staging serialization
+        self._peer_lock = threading.Lock()  # peer wiring
+        self.peer_addrs: Dict[str, Tuple[str, int]] = {}
+        self.peers: Dict[str, WorkerChannel] = {}
+        self._listener: Optional[socket.socket] = None
+
+    # -- peer wiring -----------------------------------------------------
+    def do_peer_addr(self) -> int:
+        """Open (once) the listening socket other workers forward into;
+        returns its port.  The coordinator learns the host from this
+        worker's connection address and distributes {node: (host, port)}
+        maps via ``set_peers``."""
+        with self._peer_lock:
+            if self._listener is None:
+                srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+                srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                srv.bind(("0.0.0.0", 0))
+                srv.listen(16)
+                self._listener = srv
+                threading.Thread(target=self._accept_peers,
+                                 name=f"peers-{self.node}",
+                                 daemon=True).start()
+            return self._listener.getsockname()[1]
+
+    def _accept_peers(self) -> None:
+        while True:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.settimeout(300.0)
+            threading.Thread(target=serve_connection, args=(conn,),
+                             kwargs={"worker": self}, daemon=True).start()
+
+    def do_set_peers(self, addrs: Dict[str, Any]) -> None:
+        """Install the routed topology.  Channels to nodes whose address
+        changed (replan moved or respawned them) are dropped and re-dialed
+        lazily."""
+        with self._peer_lock:
+            new = {n: (str(h), int(p)) for n, (h, p) in addrs.items()}
+            for n, ch in list(self.peers.items()):
+                if self.peer_addrs.get(n) != new.get(n):
+                    ch.close()
+                    del self.peers[n]
+            self.peer_addrs = new
+
+    def _peer(self, node: str) -> WorkerChannel:
+        with self._peer_lock:
+            ch = self.peers.get(node)
+            if ch is not None and ch.alive:
+                return ch
+            addr = self.peer_addrs.get(node)
+            if addr is None:
+                raise RuntimeError(
+                    f"{self.node}: no peer address for {node} — "
+                    "coordinator never sent set_peers for this topology")
+            s = socket.create_connection(addr, timeout=60.0)
+            ch = WorkerChannel(s, node=f"{self.node}->{node}",
+                               timeout_s=60.0)
+            self.peers[node] = ch
+            return ch
 
     # -- staged payloads -------------------------------------------------
     def _resolve(self, x):
@@ -101,6 +186,27 @@ class StageWorker:
     def handle(self, method: str, args: List[Any]):
         if method == "ping":
             return "pong"
+        if method == "peer_addr":
+            return self.do_peer_addr()
+        if method == "set_peers":
+            return self.do_set_peers(dict(args[0]))
+        pushes: List[Tuple[str, int, Any]] = []
+        with self._lock:
+            result = self._dispatch(method, args, pushes)
+        # peer pushes run OUTSIDE the worker lock: waiting on a peer's ack
+        # must never block that peer's own compute against us
+        for dst, tag, payload in pushes:
+            try:
+                self._peer(dst).call("stage", tag, payload)
+            except (WorkerDied, OSError):
+                # peer gone: drop the frame — the coordinator's failover
+                # requeues the pass and epoch guards kill the stale
+                # delivery, matching the transport pump's drop semantics
+                pass
+        return result
+
+    def _dispatch(self, method: str, args: List[Any],
+                  pushes: List[Tuple[str, int, Any]]):
         if method == "stage":
             return self.do_stage(args[0], args[1])
         if method == "init":
@@ -109,16 +215,47 @@ class StageWorker:
         if eng is None:
             raise RuntimeError(f"{method!r} before init")
         if method == "prefill_stage":
-            slot, x, entry = args
-            return eng.prefill_stage(slot, self._resolve(x), entry)
+            slot, x, entry = args[:3]
+            fwd = args[3] if len(args) > 3 else None
+            out = eng.prefill_stage(slot, self._resolve(x), entry)
+            if fwd is not None:
+                pushes.append((fwd[0], fwd[1], out))
+                return None
+            return out
         if method == "prefill_chunk":
-            slot, x, entry, start = args
-            return eng.prefill_chunk(slot, self._resolve(x), entry, start)
+            slot, x, entry, start = args[:4]
+            fwd = args[4] if len(args) > 4 else None
+            out = eng.prefill_chunk(slot, self._resolve(x), entry, start)
+            if fwd is not None:
+                pushes.append((fwd[0], fwd[1], out))
+                return None
+            return out
         if method == "decode_stage":
             items = [DecodeItem(slot=s, pos=p, entry=e, token=t,
                                 h=self._resolve(h))
                      for s, p, e, t, h in args[0]]
-            return [(o.h, o.logits) for o in eng.decode_stage(items)]
+            fwds = args[1] if len(args) > 1 else None
+            outs = eng.decode_stage(items)
+            reply = []
+            for i, o in enumerate(outs):
+                f = fwds[i] if fwds else None
+                if f is not None:
+                    pushes.append((f[0], f[1], o.h))
+                    reply.append((None, o.logits))
+                else:
+                    reply.append((o.h, o.logits))
+            return reply
+        if method == "export_kv":
+            slot, tokens, layers = args[:3]
+            fwd = args[3] if len(args) > 3 else None
+            out = eng.export_kv(slot, tokens, list(layers))
+            if fwd is not None:
+                pushes.append((fwd[0], fwd[1], out))
+                return None
+            return out
+        if method == "import_kv":
+            slot, tokens, payload = args
+            return eng.import_kv(slot, tokens, self._resolve(payload))
         if method == "alloc_slot":
             return eng.alloc_slot(args[0])
         if method == "free_slot":
@@ -139,10 +276,14 @@ class StageWorker:
         raise RuntimeError(f"unknown method {method!r}")
 
 
-def serve_connection(sock: socket.socket) -> None:
-    """Frame loop: one request, one reply, until shutdown or the
-    coordinator goes away."""
-    worker = StageWorker()
+def serve_connection(sock: socket.socket,
+                     worker: Optional[StageWorker] = None) -> None:
+    """Frame loop: one request, one reply, until shutdown or the peer goes
+    away.  The coordinator connection creates the worker; accepted peer
+    connections share it (so peer-staged payloads land in the same stash
+    the engine RPCs resolve from)."""
+    if worker is None:
+        worker = StageWorker()
     while True:
         try:
             frame = recv_frame(sock)

@@ -41,11 +41,30 @@ pool occupancy into the scheduler's ``KVEstimator`` (``sync``), and installs
 real pool capacities at startup — IWRR masking reflects actual paged usage
 rather than arrival-time reservations drifting from reality.
 
+Routing: every admitted job carries a ``Route`` (prefill pipeline, decode
+pipeline, KV handoffs).  With ``transport.direct_links`` the runtime passes
+forward specs (``fwd=(dst_node, tag)``) to forward-capable engines, so stage
+workers push activation frames straight to the next stage's worker and only
+a ``StagedRef`` (and sampled tokens) return to the coordinator — k+1
+transport hops per decode token instead of the star topology's 2k.  Both
+transports keep per-(src, dst) hop/byte counters surfaced via ``describe()``.
+
+Disaggregation: a placement whose ``meta["roles"]`` tags nodes
+prefill/decode/mixed splits into per-role sub-placements, each re-planned
+with max-flow into its own scheduler; prompt passes run on the prefill
+replica, then each prefill stage's KV (paged: gathered pages + int8 scales,
+verbatim) ships to the decode nodes that need it (``export_kv`` →
+``import_kv``, over peer links when available).  Decode launches gate on
+``kv_pending`` draining; prefill-only slots are released once their
+handoffs land.
+
 Failover: ``fail_node`` drops a node's engine and requeues every in-flight
-request that crossed it; after the planner replans, ``apply_plan`` rebuilds
-engines whose slices changed, swaps IWRR weights (``update_weights`` when the
-placement survived, a fresh scheduler otherwise), and the requeued requests
-re-prefill (prompt + generated tokens) on fresh pipelines.
+request whose route crossed it; after the planner replans, ``apply_plan``
+rebuilds engines whose slices changed, swaps IWRR weights
+(``update_weights`` when the placement survived, a fresh scheduler
+otherwise), and the requeued requests re-prefill (prompt + generated
+tokens) on fresh routes.  A role-less replacement plan drops the runtime
+back to mixed (one unified scheduler, no handoffs).
 """
 from __future__ import annotations
 
@@ -100,15 +119,28 @@ class Transport:
 class InProcessTransport(Transport):
     """Same-process transport: payloads are handed over by reference after an
     optional modelled link delay (latency + nbytes/bandwidth).  This is the
-    seam a real RPC transport plugs into later."""
+    seam a real RPC transport plugs into later.
+
+    ``direct_links`` models the routed worker-to-worker topology (the
+    default): a stage->stage send costs one (src, dst) hop.  With
+    ``direct_links=False`` the transport models the legacy coordinator-
+    mediated star: every stage->stage send is charged as TWO physical hops
+    — (src, COORDINATOR) then (COORDINATOR, dst) — with both link delays
+    paid back to back, exactly the round trip a reply-driven socket run
+    pays when the activation returns as the RPC reply before being staged
+    to the next worker.  Hop and byte counters reflect the physical route
+    either way, so the 2k -> k per-pass reduction is measurable."""
 
     def __init__(self, default_delay_s: float = 0.0,
                  link_delay_s: Optional[Mapping[Tuple[str, str], float]] = None,
-                 bandwidth_bytes_per_s: float = 0.0):
+                 bandwidth_bytes_per_s: float = 0.0, *,
+                 direct_links: bool = True):
         self.default_delay_s = default_delay_s
         self.link_delay_s = dict(link_delay_s or {})
         self.bandwidth = bandwidth_bytes_per_s
+        self.direct_links = direct_links
         self.transfers: Dict[Tuple[str, str], int] = defaultdict(int)
+        self.bytes_sent: Dict[Tuple[str, str], float] = defaultdict(float)
 
     def delay(self, src: str, dst: str, nbytes: float) -> float:
         d = self.link_delay_s.get((src, dst), self.default_delay_s)
@@ -116,11 +148,29 @@ class InProcessTransport(Transport):
             d += nbytes / self.bandwidth
         return d
 
+    def _count(self, src: str, dst: str, nbytes: float) -> None:
+        self.transfers[(src, dst)] += 1
+        self.bytes_sent[(src, dst)] += nbytes
+
     def send(self, src: str, dst: str, payload: Any, nbytes: float,
              deliver: Callable[[Any], None]) -> None:
-        self.transfers[(src, dst)] += 1
-        self._schedule(self.delay(src, dst, nbytes),
-                       lambda: deliver(payload))
+        if (self.direct_links or src == COORDINATOR or dst == COORDINATOR):
+            self._count(src, dst, nbytes)
+            self._schedule(self.delay(src, dst, nbytes),
+                           lambda: deliver(payload))
+            return
+        # star route: src -> coordinator (RPC reply) -> dst (staging)
+        self._count(src, COORDINATOR, nbytes)
+        self._count(COORDINATOR, dst, nbytes)
+        d = (self.delay(src, COORDINATOR, nbytes)
+             + self.delay(COORDINATOR, dst, nbytes))
+        self._schedule(d, lambda: deliver(payload))
+
+    def describe(self) -> str:
+        frags = [f"{s}->{d}={n}/{self.bytes_sent[(s, d)]:.0f}B"
+                 for (s, d), n in sorted(self.transfers.items())]
+        mode = "direct" if self.direct_links else "star"
+        return f"hops[{mode}: " + ", ".join(frags) + "]"
 
 
 # ---------------------------------------------------------------------------
@@ -128,9 +178,42 @@ class InProcessTransport(Transport):
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class Route:
+    """Per-job compiled dataflow: which nodes run the prompt pass, which
+    run decode passes, and which KV handoffs bridge the two replica groups.
+    For plain (non-disaggregated) placements prefill and decode are the
+    same pipeline and there are no handoffs.  Routes are compiled at every
+    (re)admission, so failover replans rebuild them for free.
+
+    ``handoffs`` maps a prefill stage index to the ``(decode node, global
+    layers)`` exports due once that stage's final prompt chunk lands —
+    layers are matched by global index, so any pair of prefill/decode
+    layer splits composes."""
+
+    prefill: Any                      # RequestPipeline for prompt passes
+    decode: Any                       # RequestPipeline for decode passes
+    handoffs: Dict[int, List[Tuple[str, List[int]]]] = \
+        dataclasses.field(default_factory=dict)
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.prefill is not self.decode
+
+    @property
+    def nodes(self) -> set:
+        return ({st.node for st in self.prefill.stages}
+                | {st.node for st in self.decode.stages})
+
+
+@dataclasses.dataclass
 class _Job:
     req: Request
-    pipe: Any = None                 # RequestPipeline (kept across preemption)
+    pipe: Any = None                 # decode RequestPipeline (== route.decode)
+    route: Optional[Route] = None    # compiled dataflow (kept across preempt)
+    kv_pending: set = dataclasses.field(default_factory=set)
+                                     # (prefill stage idx, decode node) KV
+                                     # handoffs not yet imported: decode
+                                     # cannot launch until this empties
     slots: Dict[str, int] = dataclasses.field(default_factory=dict)
     pos: int = 0                     # tokens confirmed resident in caches
     epoch: int = 0                   # bumped on preempt/requeue/complete:
@@ -199,7 +282,7 @@ class ClusterRuntime:
         if plan.model.num_layers != cfg.num_layers:
             raise ValueError(f"plan covers {plan.model.num_layers} layers; "
                              f"{cfg.name} has {cfg.num_layers}")
-        self.scheduler = plan.make_scheduler()
+        self._build_role_schedulers(plan)
         self.transport = transport or InProcessTransport()
         # realtime transports (sockets) finish deliveries on their own
         # threads: they get a thread-safe mailbox drained by step(), and the
@@ -283,6 +366,42 @@ class ClusterRuntime:
                                 interpret=self.interpret,
                                 rng_seed=self.rng_seed)
 
+    # -- role schedulers (disaggregated prefill/decode) -----------------------
+    def _build_role_schedulers(self, plan) -> None:
+        """Install the IWRR scheduler(s).  When the placement carries
+        replica roles (``meta["roles"]``: node -> prefill|decode|mixed)
+        with genuinely distinct prefill and decode groups, each role gets
+        its own scheduler over its own sub-placement (max-flow recomputed
+        on the role's subgraph, KV estimation over the role's nodes);
+        otherwise one scheduler serves both, as before."""
+        roles = (plan.placement.meta or {}).get("roles") or {}
+        pre = {n for n, r in roles.items() if r in ("prefill", "mixed")}
+        dec = {n for n, r in roles.items() if r in ("decode", "mixed")}
+        if not (pre and dec) or pre == dec:
+            self.scheduler = plan.make_scheduler()
+            self.sched_prefill = self.scheduler
+            return
+        from ..core.placement import Placement
+        from ..core.planner import plan as _plan
+
+        def sub(nodes: set):
+            p = Placement({n: plan.placement.assignment[n] for n in nodes},
+                          plan.placement.num_layers,
+                          meta=dict(plan.placement.meta))
+            bad = p.validate()
+            if bad:
+                raise ValueError(
+                    f"role group {sorted(nodes)} does not cover the model "
+                    f"on its own: {bad}")
+            return _plan(plan.cluster, plan.model, placement=p)
+
+        self.scheduler = sub(dec).make_scheduler()
+        self.sched_prefill = sub(pre).make_scheduler()
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.sched_prefill is not self.scheduler
+
     # -- event machinery ----------------------------------------------------
     def _push(self, t: float, fn: Callable[[], None]) -> None:
         self._eseq += 1
@@ -295,6 +414,28 @@ class ClusterRuntime:
     def _act_bytes(self, n_tokens: int) -> float:
         elt = {"bfloat16": 2, "float32": 4}[self.cfg.param_dtype]
         return float(n_tokens * self.cfg.d_model * elt)
+
+    def _kv_bytes(self, tokens: int, n_layers: int) -> float:
+        return float(self.profile.kv_bytes_per_token_layer
+                     * tokens * n_layers)
+
+    def _fwd_spec(self, eng, dst: Optional[str]
+                  ) -> Optional[Tuple[str, int]]:
+        """Forward spec ``(dst node, staging tag)`` when this engine's
+        output can be pushed worker-to-worker instead of riding the RPC
+        reply: the transport advertises direct links, both endpoints are
+        forward-capable workers, and the destination is a node (tokens to
+        the coordinator always come back on the reply)."""
+        if dst is None or dst == COORDINATOR:
+            return None
+        if not getattr(self.transport, "direct_links", False):
+            return None
+        alloc = getattr(self.transport, "alloc_tag", None)
+        if alloc is None or not getattr(eng, "forward_capable", False):
+            return None
+        if not getattr(self.engines.get(dst), "forward_capable", False):
+            return None
+        return (dst, alloc())
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -387,13 +528,19 @@ class ClusterRuntime:
 
     # -- KV feedback --------------------------------------------------------
     def _sync_kv(self, capacities: bool = False) -> None:
-        kv = self.scheduler.kv
-        if kv is None:
-            return
-        for node, eng in self.engines.items():
-            if capacities:
-                kv.capacity_tokens[node] = float(eng.kv_tokens_capacity())
-            kv.sync(node, float(eng.kv_tokens_used()))
+        scheds = [self.scheduler]
+        if self.sched_prefill is not self.scheduler:
+            scheds.append(self.sched_prefill)
+        for sched in scheds:
+            kv = sched.kv
+            if kv is None:
+                continue
+            for node, eng in self.engines.items():
+                if node not in kv.capacity_tokens:
+                    continue             # the other role group's node
+                if capacities:
+                    kv.capacity_tokens[node] = float(eng.kv_tokens_capacity())
+                kv.sync(node, float(eng.kv_tokens_used()))
 
     # -- admission ----------------------------------------------------------
     def _prefill_tokens(self, job: _Job) -> np.ndarray:
@@ -406,28 +553,56 @@ class ClusterRuntime:
                 [prompt, np.asarray(job.req.output[:-1], np.int32)])
         return prompt
 
+    def _compile_route(self, job: _Job) -> None:
+        """Compile the job's dataflow.  Disaggregated placements schedule a
+        pipeline per role and derive the KV handoffs bridging them (decode
+        layer l ships from the prefill stage that computed l, unless the
+        same node plays both parts and the KV is already home)."""
+        if not self.disaggregated:
+            pipe = self.scheduler.schedule()
+            job.route = Route(prefill=pipe, decode=pipe)
+            job.pipe = pipe
+            return
+        d = self.scheduler.schedule()
+        p = self.sched_prefill.schedule()
+        handoffs: Dict[int, List[Tuple[str, List[int]]]] = {}
+        for sd in d.stages:
+            for si, sp in enumerate(p.stages):
+                if sp.node == sd.node:
+                    continue            # mixed node: KV stays in its slot
+                common = [l for l in range(sd.layers.start, sd.layers.end)
+                          if sp.layers.start <= l < sp.layers.end]
+                if common:
+                    handoffs.setdefault(si, []).append((sd.node, common))
+        job.route = Route(prefill=p, decode=d, handoffs=handoffs)
+        job.pipe = d
+
     def _admit(self) -> bool:
         progressed = False
         while self.queue:
             job = self.queue[0]
-            if job.pipe is None:
+            if job.route is None:
                 try:
-                    job.pipe = self.scheduler.schedule()
+                    self._compile_route(job)
                 except RuntimeError:
                     break               # no route (mid-replan): wait
             S = len(self._prefill_tokens(job))
             need = min(S + 1, self.ec.max_len)
+            nodes: List[str] = []       # prefill-first union, slot per node
+            for st in (*job.route.prefill.stages, *job.route.decode.stages):
+                if st.node not in nodes:
+                    nodes.append(st.node)
             taken: List[Tuple[str, int]] = []
             ok = True
-            for st in job.pipe.stages:
-                eng = self.engines.get(st.node)
+            for node in nodes:
+                eng = self.engines.get(node)
                 slot = eng.alloc_slot(job.req.request_id) if eng else None
                 if slot is None or not eng.ensure(slot, need):
                     if slot is not None:
                         eng.free_slot(slot)
                     ok = False
                     break
-                taken.append((st.node, slot))
+                taken.append((node, slot))
             if not ok:
                 for node, slot in taken:
                     self.engines[node].release(slot)
@@ -435,6 +610,9 @@ class ClusterRuntime:
             self.queue.popleft()
             job.slots = dict(taken)
             job.pos = S
+            job.kv_pending = {(si, dst)
+                              for si, hs in job.route.handoffs.items()
+                              for dst, _ in hs}
             # open the in-flight window: the first decode pass consumes the
             # last known token at position S and produces output index
             # ``next_j`` (a fresh request's prefill token is index 0, so its
@@ -456,7 +634,7 @@ class ClusterRuntime:
 
     def _dispatch_prefill(self, job: _Job) -> None:
         tokens = self._prefill_tokens(job)
-        first = job.pipe.stages[0].node
+        first = job.route.prefill.stages[0].node
         if self._chunked:
             chunk = tokens[:max(1, self.ec.prompt_len)]
             self._send(COORDINATOR, first, chunk,
@@ -511,20 +689,28 @@ class ClusterRuntime:
 
     def _prefill_exec(self, job: _Job, epoch: int, si: int, x,
                       off: Optional[int]) -> None:
-        st = job.pipe.stages[si]
+        stages = job.route.prefill.stages
+        st = stages[si]
         eng = self.engines[st.node]
         slot = job.slots[st.node]
         entry = st.layers.start
         n_tok = self._chunk_tokens(job, off)
+        last = si == len(stages) - 1
+        nxt = None if last else stages[si + 1].node
+        # route-driven forwarding: the engine RPC carries the next hop, so
+        # a worker pushes its activation frame straight to the next stage's
+        # worker and replies with only an ack (the StagedRef the runtime
+        # then routes)
+        fwd = self._fwd_spec(eng, nxt)
         if self._chunked:
-            out = eng.prefill_chunk(slot, x, entry, off)
+            out = eng.prefill_chunk(slot, x, entry, off,
+                                    **({"fwd": fwd} if fwd else {}))
         else:
-            out = eng.prefill_stage(slot, x, entry)
+            out = eng.prefill_stage(slot, x, entry,
+                                    **({"fwd": fwd} if fwd else {}))
         if off is not None:
             job.hop_next[si] = off + n_tok
-        last = si == len(job.pipe.stages) - 1
         if not last:
-            nxt = job.pipe.stages[si + 1].node
             self._send(st.node, nxt, out, self._act_bytes(n_tok),
                        self._hop(job, si + 1, off))
         if self._chunked and si == 0:
@@ -536,7 +722,13 @@ class ClusterRuntime:
                 self._send(COORDINATOR, st.node, chunk,
                            len(chunk) * self.profile.token_bytes,
                            self._hop(job, 0, off=nxt_off))
-        if last and (off is None or off + n_tok >= job.pos):
+        stage_done = off is None or off + n_tok >= job.pos
+        if stage_done:
+            # this stage's KV is complete: ship it to the decode replica(s)
+            # that will read these layers (disaggregated placements only)
+            for dst, lays in job.route.handoffs.get(si, []):
+                self._start_handoff(job, epoch, si, dst, lays)
+        if last and stage_done:
             # final chunk left the final stage: out is last-token logits
             if job.resumed:
                 tok = job.req.output[-1]      # sampled before eviction
@@ -551,6 +743,65 @@ class ClusterRuntime:
             # classic walk, so depth-1 latency is comparable on any trace.
             if self.max_inflight > 1:
                 self._maybe_launch(job, st.node, int(tok), job.next_j)
+
+    # -- KV handoff (disaggregated prefill -> decode) ------------------------
+    def _start_handoff(self, job: _Job, epoch: int, si: int, dst: str,
+                       layers: List[int]) -> None:
+        """Ship one prefill stage's filled KV (prompt tokens x ``layers``)
+        to a decode replica.  Over direct links the export is pushed
+        worker-to-worker (int8 pages + scales travel as-is); otherwise the
+        payload rides the reply and the transport stages it — either way
+        the decode launch stays gated on ``kv_pending``."""
+        st = job.route.prefill.stages[si]
+        eng = self.engines.get(st.node)
+        if eng is None or st.node not in job.slots:
+            return                      # mid-failover: the job will requeue
+        fwd = self._fwd_spec(eng, dst)
+        payload = eng.export_kv(job.slots[st.node], job.pos, layers,
+                                **({"fwd": fwd} if fwd else {}))
+        self._send(st.node, dst, payload, self._kv_bytes(job.pos,
+                                                         len(layers)),
+                   lambda p, jb=job, e=epoch, s=si, d=dst:
+                   self._finish_handoff(jb, e, s, d, p))
+
+    def _finish_handoff(self, job: _Job, epoch: int, si: int, dst: str,
+                        payload) -> None:
+        if job.epoch != epoch:
+            return
+        key = ("kv", si, dst)
+        if key in job.seen:
+            return                      # duplicated delivery (chaos link)
+        job.seen.add(key)
+        eng = self.engines.get(dst)
+        if eng is None or dst not in job.slots:
+            return
+        eng.import_kv(job.slots[dst], job.pos, payload)
+        job.kv_pending.discard((si, dst))
+        self._maybe_release_prefill(job)
+        if not job.kv_pending and job.req.output:
+            # the first token may have confirmed while KV was in flight —
+            # its launch attempt was gated; relaunch now that decode can run
+            self._maybe_launch(job, COORDINATOR, int(job.req.output[-1]),
+                               len(job.req.output))
+            self._drain_inbox(job)
+
+    def _maybe_release_prefill(self, job: _Job) -> None:
+        """Free prefill-only nodes' slots (and KV) once every handoff out
+        of them has landed — long prompts stop holding decode-side pools,
+        which is the point of disaggregating."""
+        if not job.route.disaggregated:
+            return
+        decode_nodes = {st.node for st in job.route.decode.stages}
+        pending_src = {job.route.prefill.stages[s].node
+                       for s, _ in job.kv_pending}
+        for st in job.route.prefill.stages:
+            if st.node in decode_nodes or st.node in pending_src:
+                continue
+            slot = job.slots.pop(st.node, None)
+            if slot is not None:
+                eng = self.engines.get(st.node)
+                if eng is not None:
+                    eng.release(slot)
 
     # -- token arrivals (coordinator) ----------------------------------------
     def _stop_reason(self, job: _Job) -> Optional[str]:
@@ -625,6 +876,8 @@ class ClusterRuntime:
         req = job.req
         if req.done or job.next_j != expect_j:
             return
+        if job.kv_pending:
+            return                   # decode KV still in flight from prefill
         if job.next_j >= req.max_new_tokens or job.next_pos >= self.ec.max_len:
             return                   # pass could never be confirmed
         if job.inflight >= self.max_inflight:
@@ -708,7 +961,19 @@ class ClusterRuntime:
                                 entry=w["job"].pipe.stages[w["si"]]
                                 .layers.start,
                                 token=w["tok"], h=w["h"]) for w in batch]
-            outs = eng.decode_stage(items)
+            fwds = None
+            if getattr(eng, "forward_capable", False) and \
+                    getattr(self.transport, "direct_links", False):
+                fwds = []
+                for w in batch:
+                    pipe = w["job"].pipe
+                    nxt = (None if w["si"] == len(pipe.stages) - 1
+                           else pipe.stages[w["si"] + 1].node)
+                    fwds.append(self._fwd_spec(eng, nxt))
+            if fwds and any(f is not None for f in fwds):
+                outs = eng.decode_stage(items, fwds=fwds)
+            else:
+                outs = eng.decode_stage(items)
             for w, out in zip(batch, outs):
                 job, si, epoch, j = w["job"], w["si"], w["epoch"], w["j"]
                 if si == len(job.pipe.stages) - 1:
@@ -776,18 +1041,21 @@ class ClusterRuntime:
                 proc.kill()
                 proc.wait(timeout=10)    # reap: no zombie per failover
         for job in list(self.jobs.values()):
-            if name in job.pipe.nodes:
+            if name in job.route.nodes:
                 self._requeue(job, clear_pipe=True)
         for job in self.queue:
-            if job.pipe is not None and name in job.pipe.nodes:
+            if job.route is not None and name in job.route.nodes:
                 job.pipe = None
+                job.route = None
 
     def _requeue(self, job: _Job, clear_pipe: bool) -> None:
         job.epoch += 1               # cancels every in-flight pass
         job.inbox = {}
+        job.kv_pending = set()       # readmission restarts any KV handoff
         self._release_all(job)
         if clear_pipe:
             job.pipe = None
+            job.route = None
         self.jobs.pop(job.req.request_id, None)
         job.req.preemptions += 1
         self.queue.appendleft(job)
@@ -813,19 +1081,28 @@ class ClusterRuntime:
         # cached pipeline crosses a rebuilt node would execute stale layer
         # ranges — force them to reschedule
         for job in self.queue:
-            if job.pipe is not None and changed.intersection(job.pipe.nodes):
+            if job.route is not None and \
+                    changed.intersection(job.route.nodes):
                 job.pipe = None
-        same = self.placement.assignment == new_assign
+                job.route = None
+        same = (self.placement.assignment == new_assign
+                and (self.placement.meta or {}).get("roles")
+                == (plan.placement.meta or {}).get("roles"))
         self.cluster = plan.cluster
         self.placement = plan.placement
         self.profile = plan.model
-        if same and self.scheduler.placement.assignment == new_assign:
+        if same and not self.disaggregated and \
+                self.scheduler.placement.assignment == new_assign:
             self.scheduler.update_weights(plan.flows)
         else:
             kv_old = self.scheduler.kv
-            self.scheduler = plan.make_scheduler()
+            kv_pre = self.sched_prefill.kv
+            self._build_role_schedulers(plan)
             if self.scheduler.kv is not None and kv_old is not None:
                 self.scheduler.kv.high_water = kv_old.high_water
+            if self.sched_prefill is not self.scheduler and \
+                    self.sched_prefill.kv is not None and kv_pre is not None:
+                self.sched_prefill.kv.high_water = kv_pre.high_water
         self._sync_kv(capacities=True)
 
     # -- introspection --------------------------------------------------------
@@ -851,6 +1128,7 @@ class ClusterRuntime:
                       connect: Optional[str] = None,
                       queue_depth: int = 8,
                       worker_timeout_s: float = 300.0,
+                      direct_links: bool = False,
                       **kw) -> "ClusterRuntime":
         """Build a runtime whose stage engines live in separate OS
         processes behind a ``SocketTransport``.
@@ -922,9 +1200,34 @@ class ClusterRuntime:
             for node in nodes:
                 channels[node] = _spawn(node)
 
-        transport = SocketTransport(channels, queue_depth=queue_depth)
+        transport = SocketTransport(channels, queue_depth=queue_depth,
+                                    direct_links=direct_links)
         cfg_wire = dataclasses.asdict(cfg)
         ec_wire = dataclasses.asdict(engine_cfg)
+
+        def _wire_peers() -> None:
+            """(Re)build the worker-to-worker mesh: ask every live worker
+            for its peer listener port, then broadcast the full address
+            book.  Runs after every init/respawn so a replaced worker's
+            new port propagates; workers drop channels whose address
+            changed and re-dial lazily."""
+            addrs: Dict[str, Tuple[str, int]] = {}
+            for node, ch in sorted(channels.items()):
+                if not ch.alive:
+                    continue
+                try:
+                    port = ch.call("peer_addr")
+                    host = ch.sock.getpeername()[0]
+                except (WorkerDied, OSError):
+                    continue
+                addrs[node] = (host, int(port))
+            for node, ch in sorted(channels.items()):
+                if not ch.alive:
+                    continue
+                try:
+                    ch.call("set_peers", addrs)
+                except (WorkerDied, OSError):
+                    pass
 
         def factory(rt: "ClusterRuntime", node: str, rng: LayerRange):
             import jax
@@ -950,6 +1253,8 @@ class ClusterRuntime:
                 "paged": spec["paged"], "num_pages": spec["num_pages"],
                 "page_size": rt.page_size, "kv_dtype": spec["kv_dtype"],
                 "interpret": rt.interpret, "rng_seed": rt.rng_seed})
+            if direct_links:
+                _wire_peers()
             return RemoteStageEngine(ch, node, rng_seed=rt.rng_seed)
 
         rt = cls(cfg, params, plan, engine_cfg, transport=transport,

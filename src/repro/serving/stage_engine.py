@@ -37,12 +37,12 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.placement import LayerRange
-from ..models.paged import all_blocks_paged
-from ..models.stage import (stage_absorb_dense_prefill, stage_cache_init,
-                            stage_cache_init_paged, stage_decode,
-                            stage_decode_paged, stage_num_paged_layers,
-                            stage_params, stage_prefill,
-                            stage_prefill_chunk_paged)
+from ..models.paged import all_blocks_paged, is_paged_block
+from ..models.stage import (stage_absorb_dense_prefill, stage_blocks,
+                            stage_cache_init, stage_cache_init_paged,
+                            stage_decode, stage_decode_paged,
+                            stage_num_paged_layers, stage_params,
+                            stage_prefill, stage_prefill_chunk_paged)
 from .engine import EngineConfig, _active_blocks_bucket
 from .kv_pool import PagePool, full_rectangle_pages
 from .sampling import sample_token
@@ -222,6 +222,33 @@ class StageEngine(_StageEngineBase):
     def kv_tokens_capacity(self) -> int:
         return self.ec.max_batch * self.ec.max_len
 
+    # -- KV handoff (disaggregated prefill -> decode replicas) -----------
+    def export_kv(self, slot: int, tokens: int, layers: List[int]):
+        """Snapshot this slot's filled caches for the given *global* layer
+        indices as a wire tree ``{layer: cache subtree}`` (batchless
+        leaves) — the decode replica splices them with ``import_kv``."""
+        want = set(layers)
+        out = {}
+        for (l, _), c in zip(stage_blocks(self.cfg, self.layers),
+                             self.caches):
+            if l in want:
+                out[l] = jax.tree.map(lambda a: np.asarray(a[slot]), c)
+        return out
+
+    def import_kv(self, slot: int, tokens: int, payload) -> None:
+        new = []
+        for (l, _), c in zip(stage_blocks(self.cfg, self.layers),
+                             self.caches):
+            one = payload.get(l)
+            if one is None:
+                new.append(c)
+            else:
+                new.append(jax.tree.map(
+                    lambda full, a: full.at[slot].set(jnp.asarray(a)),
+                    c, one))
+        self.caches = new
+        self._active_tokens[slot] = tokens
+
 
 class PagedStageEngine(_StageEngineBase):
     """Paged-KV stage engine: the node's paged blocks share one ``PagePool``
@@ -340,6 +367,72 @@ class PagedStageEngine(_StageEngineBase):
         self.caches = jax.tree.map(
             lambda full, one: _splice(full, one, slot), self.caches, caches1)
         return np.asarray(out)[0] if self.is_last else np.asarray(out)
+
+    # -- KV handoff (disaggregated prefill -> decode replicas) -----------
+    def export_kv(self, slot: int, tokens: int, layers: List[int]):
+        """Snapshot this slot's KV for the given *global* layer indices:
+        paged blocks ship their live pages (int8 pages + per-page scales
+        travel as-is, no requantization), hybrid dense blocks ship their
+        cache subtree."""
+        want = set(layers)
+        nb = -(-tokens // self.pool.page)
+        out = {}
+        li = 0
+        for (l, b), c in zip(stage_blocks(self.cfg, self.layers),
+                             self.caches):
+            paged = is_paged_block(self.cfg, b)
+            if l in want:
+                if paged:
+                    pids = self.pool.table[li, slot, :nb]
+                    p = {"k": np.asarray(self.pool.k[pids]),
+                         "v": np.asarray(self.pool.v[pids])}
+                    if self.pool.quantized:
+                        p["ks"] = np.asarray(self.pool.k_scales[pids])
+                        p["vs"] = np.asarray(self.pool.v_scales[pids])
+                    out[l] = p
+                else:
+                    out[l] = jax.tree.map(lambda a: np.asarray(a[slot]), c)
+            if paged:
+                li += 1
+        return out
+
+    def import_kv(self, slot: int, tokens: int, payload) -> None:
+        """Scatter a shipped KV snapshot into this slot.  The runtime
+        reserves the slot's blocks at admission; ``ensure`` here is a
+        defensive no-op growth in the common case."""
+        if not self.pool.ensure(slot, tokens):
+            raise RuntimeError(
+                f"import_kv: pool cannot hold {tokens} tokens in slot "
+                f"{slot}")
+        nb = -(-tokens // self.pool.page)
+        pool = self.pool
+        new = []
+        li = 0
+        for (l, b), c in zip(stage_blocks(self.cfg, self.layers),
+                             self.caches):
+            paged = is_paged_block(self.cfg, b)
+            p = payload.get(l)
+            if p is None:
+                new.append(c)
+            elif paged:
+                pids = jnp.asarray(pool.table[li, slot, :nb])
+                pool.k = pool.k.at[pids].set(
+                    jnp.asarray(p["k"]).astype(pool.k.dtype))
+                pool.v = pool.v.at[pids].set(
+                    jnp.asarray(p["v"]).astype(pool.v.dtype))
+                if pool.quantized:
+                    pool.k_scales = pool.k_scales.at[pids].set(
+                        jnp.asarray(p["ks"]))
+                    pool.v_scales = pool.v_scales.at[pids].set(
+                        jnp.asarray(p["vs"]))
+                new.append(c)
+            else:
+                new.append(jax.tree.map(
+                    lambda full, a: full.at[slot].set(jnp.asarray(a)),
+                    c, p))
+            if paged:
+                li += 1
+        self.caches = new
 
     # -- decode ----------------------------------------------------------
     def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:

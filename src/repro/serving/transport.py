@@ -64,6 +64,7 @@ try:                                    # registers bfloat16/float8 etc. with
 except ImportError:                     # pragma: no cover - jax ships it
     pass
 
+from ..core.cluster import COORDINATOR
 from .sampling import sample_token
 from .stage_engine import DecodeItem, DecodeOut
 
@@ -376,19 +377,31 @@ class SocketTransport:
     ``realtime = True`` tells the runtime to run its event loop on the wall
     clock (deliveries arrive through a thread-safe mailbox) instead of the
     virtual clock the in-process transport uses.
+
+    ``direct_links`` marks the routed worker-to-worker topology: stage
+    workers hold peer channels and forward activation frames directly
+    (``launch.worker``), so a stage->stage ``send`` arrives carrying a
+    ``StagedRef`` whose bytes are *already* at the destination — the
+    transport just counts the (src, dst) hop and delivers the ref.  In the
+    default star topology every stage->stage payload physically rides the
+    RPC reply back to the coordinator and is then staged to the next
+    worker; the hop/byte counters charge that honestly as (src,
+    coordinator) + (coordinator, dst), so ``describe()`` exposes the 2k ->
+    k per-pass reduction instead of asserting it.
     """
 
     realtime = True
 
     def __init__(self, channels: Optional[Dict[str, WorkerChannel]] = None,
                  *, queue_depth: int = 8, send_timeout_s: float = 60.0,
-                 stalled_after_s: float = 0.2):
+                 stalled_after_s: float = 0.2, direct_links: bool = False):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         self.channels: Dict[str, WorkerChannel] = dict(channels or {})
         self.queue_depth = queue_depth
         self.send_timeout_s = send_timeout_s
         self.stalled_after_s = stalled_after_s
+        self.direct_links = direct_links
         self.transfers: Dict[Tuple[str, str], int] = defaultdict(int)
         self.bytes_sent: Dict[Tuple[str, str], int] = defaultdict(int)
         self.dead: set = set()
@@ -405,15 +418,38 @@ class SocketTransport:
         """The runtime binds a thread-safe scheduler (mailbox put)."""
         self._schedule = schedule
 
+    def alloc_tag(self) -> int:
+        """Allocate a staging tag (shared counter with the pump path, so a
+        worker-side forward can never collide with a pump-staged payload
+        in the destination worker's stash)."""
+        return next(self._tags)
+
     # -- sending ---------------------------------------------------------
     def send(self, src: str, dst: str, payload: Any, nbytes: float,
              deliver: Callable[[Any], None]) -> None:
         if self._stop.is_set():
             return
+        if isinstance(payload, StagedRef):
+            # routed path: the source worker already pushed the bytes to
+            # the destination worker's staging area over a peer channel
+            # (and acked) before its RPC replied — one physical (src, dst)
+            # hop, nothing left to move here
+            self.transfers[(src, dst)] += 1
+            self.bytes_sent[(src, dst)] += int(nbytes)
+            self._schedule(0.0, lambda p=payload: deliver(p))
+            return
+        if src != COORDINATOR and dst != COORDINATOR:
+            # star path: the payload reached the coordinator as an RPC
+            # reply and is re-sent below — charge both physical hops
+            self.transfers[(src, COORDINATOR)] += 1
+            self.bytes_sent[(src, COORDINATOR)] += int(nbytes)
+            self.transfers[(COORDINATOR, dst)] += 1
+            self.bytes_sent[(COORDINATOR, dst)] += int(nbytes)
+        else:
+            self.transfers[(src, dst)] += 1
+            self.bytes_sent[(src, dst)] += int(nbytes)
         link = (src, dst)
         q = self._link_queue(link)
-        self.transfers[link] += 1
-        self.bytes_sent[link] += int(nbytes)
         try:
             # bounded: a slow receiver blocks the sender here instead of
             # growing an unbounded buffer
@@ -484,7 +520,12 @@ class SocketTransport:
                 frags.append(f"{link[0]}->{link[1]} queued={q.qsize()}"
                              f"{stalled}")
         dead = f" dead={sorted(self.dead)}" if self.dead else ""
-        return "links[" + ", ".join(frags) + "]" + dead
+        mode = "direct" if self.direct_links else "star"
+        hops = ", ".join(
+            f"{s}->{d}={n}/{self.bytes_sent[(s, d)]}B"
+            for (s, d), n in sorted(self.transfers.items()))
+        return ("links[" + ", ".join(frags) + "]" + dead
+                + f" hops[{mode}: {hops}]")
 
     def close(self) -> None:
         self._stop.set()
@@ -501,7 +542,17 @@ class RemoteStageEngine:
     caches and page pool; this proxy owns only the final-stage sampling RNG
     (greedy/temperature sampling runs coordinator-side on the logits the
     decode reply carries, so one RNG stream drives the pipeline exactly as
-    a local engine's would)."""
+    a local engine's would).
+
+    ``forward_capable``: compute RPCs accept a forward spec ``fwd=(dst
+    node, staging tag)``.  The worker then pushes the stage output straight
+    to the destination worker's staging area over a peer channel *before*
+    replying, and the proxy returns a ``StagedRef(tag)`` in place of the
+    payload — the runtime ships that ref through ``Transport.send``, which
+    recognizes it as an already-moved frame (one physical hop, counted on
+    the (src, dst) link)."""
+
+    forward_capable = True
 
     def __init__(self, channel: WorkerChannel, node: str, *,
                  rng_seed: int = 0):
@@ -535,16 +586,37 @@ class RemoteStageEngine:
         return self.channel.call("pool_num_pages")
 
     # -- compute ---------------------------------------------------------
-    def prefill_stage(self, slot: int, x, entry: int):
-        return self.channel.call("prefill_stage", slot, x, entry)
+    def prefill_stage(self, slot: int, x, entry: int,
+                      fwd: Optional[Tuple[str, int]] = None):
+        out = self.channel.call("prefill_stage", slot, x, entry, fwd)
+        return StagedRef(fwd[1]) if fwd is not None else out
 
-    def prefill_chunk(self, slot: int, x, entry: int, start: int):
-        return self.channel.call("prefill_chunk", slot, x, entry, start)
+    def prefill_chunk(self, slot: int, x, entry: int, start: int,
+                      fwd: Optional[Tuple[str, int]] = None):
+        out = self.channel.call("prefill_chunk", slot, x, entry, start, fwd)
+        return StagedRef(fwd[1]) if fwd is not None else out
 
-    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+    def decode_stage(self, items: List[DecodeItem],
+                     fwds: Optional[List[Optional[Tuple[str, int]]]] = None
+                     ) -> List[DecodeOut]:
         wire = [(it.slot, it.pos, it.entry, it.token, it.h) for it in items]
-        outs = self.channel.call("decode_stage", wire)
-        return [DecodeOut(h=h, logits=logits) for h, logits in outs]
+        outs = self.channel.call("decode_stage", wire,
+                                 list(fwds) if fwds else None)
+        res = []
+        for i, (h, logits) in enumerate(outs):
+            if fwds and fwds[i] is not None:
+                h = StagedRef(fwds[i][1])
+            res.append(DecodeOut(h=h, logits=logits))
+        return res
+
+    # -- KV handoff (disaggregated prefill -> decode) --------------------
+    def export_kv(self, slot: int, tokens: int, layers: List[int],
+                  fwd: Optional[Tuple[str, int]] = None):
+        out = self.channel.call("export_kv", slot, tokens, list(layers), fwd)
+        return StagedRef(fwd[1]) if fwd is not None else out
+
+    def import_kv(self, slot: int, tokens: int, payload) -> None:
+        self.channel.call("import_kv", slot, tokens, payload)
 
     def sample(self, logits, temperature: float) -> int:
         return int(sample_token(np.asarray(logits), temperature, self._rng))

@@ -53,6 +53,7 @@ class Metrics:
     node_busy_s: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     link_queue_s: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     link_transfers: Dict[Tuple[str, str], int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    link_bytes: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     restarts: int = 0
     dropped_requests: int = 0
 
@@ -146,6 +147,13 @@ class _ReqState:
     epoch: int = 0                   # bumped on restart: stale passes die
     first_token_s: Optional[float] = None
     restarted: int = 0
+    # disaggregated prefill/decode: the prompt pass walks this pipeline
+    # (decode walks ``pipeline``) and the first decode launch waits for
+    # ``kv_handoffs`` prefill->decode KV transfers to land
+    prefill_pipeline: Optional[RequestPipeline] = None
+    prefill_scheduler: Optional[BaseScheduler] = None
+    kv_handoffs: int = 0
+    kv_need: float = 0.0             # prompt-time KV reservation per node
     # the scheduler that reserved this request's pipeline — reservations
     # must be released on the same estimator even after a replan swap
     scheduler: Optional[BaseScheduler] = None
@@ -175,10 +183,20 @@ class Simulator:
                  kv_output_estimate: int = 256,
                  replan_fn: Optional[Callable] = None,
                  max_decode_tokens: Optional[int] = None,
-                 max_inflight: int = 1):
+                 max_inflight: int = 1,
+                 direct_links: bool = True,
+                 prefill_scheduler: Optional[BaseScheduler] = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.max_inflight = max_inflight
+        # direct_links mirrors the runtime transports: True charges
+        # stage->stage traffic on the (src, dst) link; False models the
+        # coordinator-star dataflow (src->coordinator then coordinator->dst)
+        self.direct_links = direct_links
+        # a distinct prefill_scheduler turns on disaggregated mode: prompt
+        # passes walk its pipelines, decode walks ``scheduler``'s, and the
+        # KV handoff transfer gates the first decode launch
+        self.prefill_scheduler = prefill_scheduler
         self.cluster = cluster
         self.model = model
         self.placement = placement
@@ -235,7 +253,21 @@ class Simulator:
         if self._now >= self.warmup_s:
             self.metrics.link_queue_s[(src, dst)] += queue_delay
             self.metrics.link_transfers[(src, dst)] += 1
+            self.metrics.link_bytes[(src, dst)] += nbytes
         self._push(link.busy_until + link.latency, deliver)
+
+    def _route_transfer(self, src: str, dst: str, nbytes: float,
+                        deliver: Callable) -> None:
+        """Node-to-node traffic takes the direct link when direct links
+        are on; otherwise it bounces through the coordinator (two
+        transfers, both charged), matching ``SocketTransport``'s star
+        dataflow."""
+        if self.direct_links or COORDINATOR in (src, dst) or src == dst:
+            self._transfer(src, dst, nbytes, deliver)
+            return
+        self._transfer(src, COORDINATOR, nbytes,
+                       lambda: self._transfer(COORDINATOR, dst, nbytes,
+                                              deliver))
 
     # -- node batch server ----------------------------------------------------
     def _charge_kv(self, ns: NodeSim, state: "_ReqState",
@@ -321,9 +353,9 @@ class Simulator:
     # -- request lifecycle ----------------------------------------------------
     def _arrive(self, req: TraceRequest, restarted: int = 0,
                 attempts: int = 0) -> None:
+        amount = req.input_tokens + self.kv_output_estimate
         try:
-            pipeline = self.scheduler.schedule(
-                prompt_tokens=req.input_tokens + self.kv_output_estimate)
+            pipeline = self.scheduler.schedule(prompt_tokens=amount)
         except RuntimeError:
             # no route available (e.g. mid-replan): retry shortly, but cap
             # like _restart does instead of retrying every 0.5 s forever
@@ -333,8 +365,24 @@ class Simulator:
             self._push(self._now + 0.5, self._arrive, req, restarted,
                        attempts + 1)
             return
+        prefill_pipe = None
+        if self.prefill_scheduler is not None:
+            try:
+                prefill_pipe = self.prefill_scheduler.schedule(
+                    prompt_tokens=amount)
+            except RuntimeError:
+                self.scheduler.finish(pipeline, amount)
+                if attempts >= self.max_schedule_attempts:
+                    self.metrics.dropped_requests += 1
+                    return
+                self._push(self._now + 0.5, self._arrive, req, restarted,
+                           attempts + 1)
+                return
         state = _ReqState(trace=req, pipeline=pipeline, arrival_s=self._now,
-                          restarted=restarted, scheduler=self.scheduler)
+                          restarted=restarted, scheduler=self.scheduler,
+                          prefill_pipeline=prefill_pipe,
+                          prefill_scheduler=(self.prefill_scheduler
+                                             if prefill_pipe else None))
         # the prompt pass produces (and therefore "launches") the first
         # output token
         state.launched = 1
@@ -343,7 +391,8 @@ class Simulator:
         p = _Pass(state, chunk=1, start=0, is_prompt=True, epoch=state.epoch)
         # coordinator -> first stage: token ids
         nbytes = req.input_tokens * self.model.token_bytes
-        self._transfer(COORDINATOR, pipeline.stages[0].node, nbytes,
+        first = (prefill_pipe or pipeline).stages[0].node
+        self._transfer(COORDINATOR, first, nbytes,
                        lambda: self._stage_work(p))
 
     def _limit(self, state: _ReqState) -> int:
@@ -352,12 +401,20 @@ class Simulator:
             limit = min(limit, self.max_decode_tokens)
         return limit
 
+    def _pipe(self, p: _Pass) -> RequestPipeline:
+        """The pipeline this pass walks: prompt passes walk the prefill
+        replica's when disaggregated, everything else walks the decode
+        pipeline."""
+        if p.is_prompt and p.state.prefill_pipeline is not None:
+            return p.state.prefill_pipeline
+        return p.state.pipeline
+
     def _stage_work(self, p: _Pass) -> None:
         """Run this pass's current stage."""
         state = p.state
         if p.epoch != state.epoch:
             return                   # request restarted while we queued
-        st = state.pipeline.stages[p.stage_idx]
+        st = self._pipe(p).stages[p.stage_idx]
         ns = self.nodes.get(st.node)
         if ns is None or not ns.alive:
             self._restart_pass(p)
@@ -368,6 +425,7 @@ class Simulator:
             tokens = state.trace.input_tokens
             kv_need = tokens + min(self.kv_output_estimate,
                                    state.trace.output_tokens)
+            state.kv_need = kv_need
             kv_grow = 0.0
         else:
             tokens = p.chunk
@@ -387,16 +445,18 @@ class Simulator:
         state = p.state
         if p.epoch != state.epoch:
             return
-        pipe = state.pipeline
+        pipe = self._pipe(p)
         st = pipe.stages[p.stage_idx]
         last = p.stage_idx == len(pipe.stages) - 1
+        if p.is_prompt and state.prefill_pipeline is not None:
+            self._fire_handoffs(state, st)
         if not last:
             nxt = pipe.stages[p.stage_idx + 1].node
             nbytes = (state.trace.input_tokens if p.is_prompt else p.chunk) \
                 * self.model.activation_bytes
             p.stage_idx += 1
-            self._transfer(st.node, nxt, nbytes,
-                           lambda: self._stage_work(p))
+            self._route_transfer(st.node, nxt, nbytes,
+                                 lambda: self._stage_work(p))
             return
         # pass complete -> token(s) to coordinator; with window room the
         # next chunk leaves for stage 0 from HERE, overlapping the return
@@ -416,6 +476,8 @@ class Simulator:
         ClusterRuntime) — the window only absorbs the coordinator return
         path."""
         limit = self._limit(state)
+        if state.kv_handoffs > 0:
+            return                   # decode replica's KV still in flight
         if state.in_pipeline or state.inflight >= self.max_inflight \
                 or state.launched >= limit:
             return
@@ -425,9 +487,51 @@ class Simulator:
         state.launched += chunk
         state.inflight += 1
         state.in_pipeline = True
-        self._transfer(src, state.pipeline.stages[0].node,
-                       self.model.token_bytes * chunk,
-                       lambda pp=p: self._stage_work(pp))
+        self._route_transfer(src, state.pipeline.stages[0].node,
+                             self.model.token_bytes * chunk,
+                             lambda pp=p: self._stage_work(pp))
+
+    def _fire_handoffs(self, state: _ReqState, st) -> None:
+        """Ship this prefill stage's filled KV to every decode stage whose
+        layer range overlaps it (skipping mixed nodes, whose KV is already
+        home), exactly like the runtime's per-stage handoff — earlier
+        stages' transfers overlap later stages' compute."""
+        for sd in state.pipeline.stages:
+            if sd.node == st.node:
+                continue
+            lo = max(st.layers.start, sd.layers.start)
+            hi = min(st.layers.end, sd.layers.end)
+            if hi <= lo:
+                continue
+            nbytes = (self.model.kv_bytes_per_token_layer
+                      * state.trace.input_tokens * (hi - lo))
+            state.kv_handoffs += 1
+            self._route_transfer(
+                st.node, sd.node, nbytes,
+                lambda s=state, e=state.epoch: self._handoff_done(s, e))
+
+    def _handoff_done(self, state: _ReqState, epoch: int) -> None:
+        if epoch != state.epoch:
+            return
+        state.kv_handoffs -= 1
+        if state.kv_handoffs > 0:
+            return
+        # all KV landed: occupancy moves to the decode replica — release
+        # the prefill-only nodes' charge, charge the decode nodes, and let
+        # decode launch (the prompt token may have confirmed while KV was
+        # in flight)
+        decode_nodes = {sd.node for sd in state.pipeline.stages}
+        for node in [n for n in list(state.kv_charged)
+                     if n not in decode_nodes]:
+            amt = state.kv_charged.pop(node)
+            ns = self.nodes.get(node)
+            if ns is not None:
+                ns.kv_used = max(0.0, ns.kv_used - amt)
+                self._admit_waiters(node)
+        for node in decode_nodes:
+            if node not in state.kv_charged and node in self.nodes:
+                self._charge_kv(self.nodes[node], state, state.kv_need)
+        self._launch_from(COORDINATOR, state)
 
     def _pass_done(self, p: _Pass) -> None:
         state = p.state
@@ -471,9 +575,12 @@ class Simulator:
         release goes to the scheduler that *made* the reservation: after a
         replan swap, releasing on the new estimator would erase other
         requests' reservations (per-node clamp at 0)."""
+        amount = state.trace.input_tokens + self.kv_output_estimate
         sched = state.scheduler or self.scheduler
-        sched.finish(state.pipeline,
-                     state.trace.input_tokens + self.kv_output_estimate)
+        sched.finish(state.pipeline, amount)
+        if state.prefill_scheduler is not None \
+                and state.prefill_pipeline is not None:
+            state.prefill_scheduler.finish(state.prefill_pipeline, amount)
 
     def _restart_pass(self, p: _Pass) -> None:
         """Restart entry point for per-pass events (dead node, lost batch).
@@ -492,6 +599,7 @@ class Simulator:
         state.epoch += 1             # cancel every in-flight pass
         state.inflight = 0
         state.in_pipeline = False
+        state.kv_handoffs = 0        # in-flight handoffs die with the epoch
         self.metrics.restarts += 1
         state.restarted += 1
         self._release_kv(state)

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import (LayerRange, ModelProfile, Placement,
-                        full_mesh_cluster, plan)
+                        disaggregated_placement, full_mesh_cluster, plan)
 from repro.core.cluster import ClusterSpec
 from repro.serving import ClusterRuntime, Engine, EngineConfig, Request
 
@@ -64,6 +64,20 @@ def make_plan(cfg, assignment: Dict[str, Tuple[int, int]], *,
                           cfg.num_layers)
     assert placement.validate() == []
     cluster = make_cluster(devs if devs is not None else len(assignment))
+    return plan(cluster, model_profile(cfg), placement=placement)
+
+
+def make_disagg_plan(cfg, prefill: Dict[str, Tuple[int, int]],
+                     decode: Dict[str, Tuple[int, int]], *,
+                     devs: Optional[Sequence[str]] = None):
+    """Plan for a disaggregated placement: ``prefill`` and ``decode`` are
+    each {node: (start, end)} groups covering the full model on their own
+    (a node in both groups with the same range becomes ``mixed``)."""
+    placement = disaggregated_placement(
+        {n: LayerRange(*r) for n, r in prefill.items()},
+        {n: LayerRange(*r) for n, r in decode.items()}, cfg.num_layers)
+    n = len(placement.assignment)
+    cluster = make_cluster(devs if devs is not None else n)
     return plan(cluster, model_profile(cfg), placement=placement)
 
 

@@ -34,7 +34,8 @@ from repro.serving import (EngineConfig, PagedEngine, PagePool, Request,
                            page_bytes, pages_for_vram)
 
 from harness import (EC, assert_pools_drained, assert_serves_like_reference,
-                     make_plan, random_prompts, serve_on_cluster)
+                     make_disagg_plan, make_plan, random_prompts,
+                     serve_on_cluster)
 
 
 # --- kernel: int8 parity -----------------------------------------------------
@@ -310,4 +311,27 @@ def test_cluster_int8_completes_and_drains(gqa_model):
     rt, reqs = serve_on_cluster(cfg, params, p, prompts, paged=True,
                                 kv_dtype="int8", max_new_tokens=5)
     assert all(r.done and len(r.output) == 5 for r in reqs)
+    assert_pools_drained(rt)
+
+
+def test_int8_disaggregated_matches_mixed_cluster(gqa_model):
+    """The int8 handoff tolerance check: quantized pages + scales travel
+    verbatim over the peer link, so a disaggregated int8 run must emit
+    token-for-token what a mixed int8 cluster with the same decode split
+    emits (quantization error is identical — the pages are the same
+    bytes)."""
+    from repro.serving import InProcessTransport
+    cfg, params = gqa_model
+    prompts = random_prompts(cfg, (10, 5, 16), seed=1)
+    pm = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    _, reqm = serve_on_cluster(cfg, params, pm, prompts, paged=True,
+                               kv_dtype="int8", max_new_tokens=5)
+    refq = [r.output for r in reqm]
+    pd = make_disagg_plan(cfg, {"n0": (0, 4)}, {"n1": (0, 2), "n2": (2, 4)})
+    rt, reqd = serve_on_cluster(cfg, params, pd, prompts, paged=True,
+                                kv_dtype="int8", max_new_tokens=5,
+                                transport=InProcessTransport(
+                                    default_delay_s=1e-3))
+    assert rt.disaggregated
+    assert [r.output for r in reqd] == refq
     assert_pools_drained(rt)

@@ -20,7 +20,7 @@ import pytest
 from repro.core import MILPOptions, replan_after_failure
 from repro.serving import ClusterRuntime, Request
 
-from harness import (EC, assert_pools_drained, make_plan)
+from harness import (EC, assert_pools_drained, make_disagg_plan, make_plan)
 
 pytestmark = pytest.mark.slow
 
@@ -59,6 +59,78 @@ def test_multiprocess_two_stage_matches_reference(gqa_model, reference,
     finally:
         rt.shutdown()
     assert not rt.workers                # shutdown reaped every process
+
+
+@pytest.mark.parametrize("max_inflight", [1, 2], ids=["depth1", "depth2"])
+def test_multiprocess_direct_links_matches_reference(gqa_model, reference,
+                                                     max_inflight):
+    """Routed worker-to-worker forwarding over real sockets: activations
+    travel on peer links (counted per (src, dst) with real byte sizes),
+    the coordinator sees only tokens, and output stays byte-identical."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    prompts, ref = prompts[:2], ref[:2]
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    rt = ClusterRuntime.spawn_workers(cfg, params, p, EC, paged=True,
+                                      max_inflight=max_inflight,
+                                      stall_timeout_s=120.0,
+                                      direct_links=True)
+    try:
+        reqs = _submit_all(rt, prompts)
+        rt.run_until_done()
+        assert [r.output for r in reqs] == ref
+        assert_pools_drained(rt)
+        tr = rt.transport
+        # every decode pass forwarded both inter-stage frames peer-to-peer
+        n_passes = sum(len(r) for r in ref)
+        assert tr.transfers[("n0", "n1")] >= n_passes
+        assert tr.transfers[("n1", "n2")] >= n_passes
+        # peer frames are activations, not tokens: real bytes were counted
+        assert tr.bytes_sent[("n0", "n1")] > \
+            tr.transfers[("n0", "n1")] * rt.profile.token_bytes
+        assert "hops[direct" in tr.describe()
+    finally:
+        rt.shutdown()
+
+
+def test_multiprocess_disaggregated_survives_worker_kill(gqa_model,
+                                                         reference):
+    """The acceptance run: 1 prefill replica + decode replicas over real
+    worker processes with direct links, byte-identical to the single-engine
+    reference — including after SIGKILLing a decode worker mid-flight and
+    adopting the replanned placement."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    prompts, ref = prompts[:2], ref[:2]
+    p = make_disagg_plan(cfg, {"n0": (0, 4)},
+                         {"n1": (0, 2), "n2": (2, 4), "n3": (0, 4)})
+    rt = ClusterRuntime.spawn_workers(cfg, params, p, EC, paged=True,
+                                      max_inflight=2, stall_timeout_s=120.0,
+                                      direct_links=True)
+    try:
+        assert rt.disaggregated
+        reqs = _submit_all(rt, prompts)
+        for _ in range(4000):
+            rt.step()
+            if rt.jobs and any(len(r.output) > 0 for r in reqs):
+                break
+        assert rt.jobs, "nothing in flight before the kill"
+        rt.kill_worker("n1")
+        rt.fail_node("n1")
+        new = replan_after_failure(p, "n1", MILPOptions(time_limit_s=5.0,
+                                                        lns_rounds=0,
+                                                        fgls_rounds=10))
+        rt.apply_plan(new)
+        rt.run_until_done()
+        assert [r.output for r in reqs] == ref
+        assert "n1" not in rt.engines and "n1" not in rt.workers
+        # KV handoffs really crossed process boundaries before the kill
+        handoff = [k for k in rt.transport.transfers if k[0] == "n0"
+                   and k[1] != "coordinator"]
+        assert handoff, dict(rt.transport.transfers)
+        assert_pools_drained(rt)
+    finally:
+        rt.shutdown()
 
 
 def test_multiprocess_worker_kill_triggers_failover(gqa_model, reference):

@@ -17,8 +17,9 @@ from repro.serving import (ClusterRuntime, Engine, EngineConfig,
                            InProcessTransport, PagedStageEngine, Request)
 
 from harness import (EC, assert_pools_drained, assert_serves_like_reference,
-                     f32, make_plan, pool_for_one_request, random_assignment,
-                     random_prompts, reference_outputs, serve_on_cluster)
+                     f32, make_disagg_plan, make_plan, pool_for_one_request,
+                     random_assignment, random_prompts, reference_outputs,
+                     serve_on_cluster)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -141,6 +142,111 @@ def test_hybrid_stack_multi_stage_paged(gqa_model):
                                       paged=True, max_inflight=2, ec=ec)
     assert not isinstance(rt.engines["n0"], PagedStageEngine)
     assert isinstance(rt.engines["n1"], PagedStageEngine)
+
+
+# --- routed forwarding: hop accounting ---------------------------------------
+
+def test_direct_links_reduce_decode_hops(gqa_model, reference):
+    """The tentpole's measurable claim: on a k=3 stage pipeline with
+    per-link delay d, star routing charges 2k hops per decode token (every
+    stage output bounces through the coordinator) while direct links charge
+    k+1 (k-1 peer hops + the token's coordinator round trip) — and the
+    per-token latency drops accordingly.  Counters come from the
+    transport's per-(src,dst) ledger, which also feeds describe()."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    d = 2e-3
+    hops, lat = {}, {}
+    for direct in (False, True):
+        tr = InProcessTransport(default_delay_s=d, direct_links=direct)
+        rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                          paged=True, transport=tr)
+        n_tokens = sum(len(r) for r in ref)
+        hops[direct] = sum(tr.transfers.values()) / n_tokens
+        lat[direct] = rt.mean_decode_latency()
+        peer = {k: v for k, v in tr.transfers.items()
+                if COORDINATOR not in k}
+        if direct:
+            assert peer.get(("n0", "n1")) and peer.get(("n1", "n2")), peer
+        else:
+            assert not peer, f"star mode must not use peer links: {peer}"
+        assert "hops[" in tr.describe()
+    assert hops[False] == pytest.approx(6.0)       # 2k
+    assert hops[True] == pytest.approx(4.0)        # k+1
+    assert lat[False] == pytest.approx(6 * d)
+    assert lat[True] == pytest.approx(4 * d)
+
+
+# --- disaggregated prefill/decode --------------------------------------------
+
+@pytest.mark.parametrize("max_inflight", [1, 2], ids=["depth1", "depth2"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_disaggregated_matches_single_engine(gqa_model, reference, paged,
+                                             max_inflight):
+    """One prefill replica holding the full model, a 2-stage decode
+    replica: prompts run on n0, the filled KV ships over peer links to
+    n1/n2, decode runs only there — outputs byte-identical to the single
+    full-model engine, pools drained everywhere."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 4)}, {"n1": (0, 2), "n2": (2, 4)})
+    tr = InProcessTransport(default_delay_s=1e-3)
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=paged, max_inflight=max_inflight,
+                                      transport=tr)
+    assert rt.disaggregated
+    # every request's KV actually travelled prefill -> decode
+    assert tr.transfers[("n0", "n1")] >= len(prompts)
+    assert tr.transfers[("n0", "n2")] >= len(prompts)
+    # decode stage-work only ever ran on the decode replica
+    for pipe in rt.served.values():
+        assert {st.node for st in pipe.stages} <= {"n1", "n2"}
+
+
+def test_disaggregated_mixed_node_keeps_kv_home(gqa_model, reference):
+    """A node in both groups (``mixed``) decodes from the KV its own
+    prefill pass filled: no handoff is shipped for its layers."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 2), "n1": (2, 4)},
+                         {"n2": (0, 2), "n1": (2, 4)})
+    assert p.placement.meta["roles"] == {"n0": "prefill", "n1": "mixed",
+                                         "n2": "decode"}
+    tr = InProcessTransport(default_delay_s=1e-3)
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=True, max_inflight=2,
+                                      transport=tr)
+    assert tr.transfers[("n0", "n2")] >= len(prompts)   # layers [0, 2) ship
+    # n1's KV stays home: its outgoing peer traffic is speculative-launch
+    # tokens only (token_bytes each), never a KV payload
+    assert tr.bytes_sent[("n1", "n2")] == \
+        tr.transfers[("n1", "n2")] * rt.profile.token_bytes
+    assert rt.disaggregated
+
+
+def test_disaggregated_failover_replans_to_mixed(gqa_model, reference):
+    """Kill a decode-replica node mid-flight: in-flight requests requeue,
+    the generic replan returns a role-less placement (disaggregation is
+    dropped, not wedged), and outputs still match the reference."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 4)},
+                         {"n1": (0, 2), "n2": (2, 4), "n3": (0, 4)})
+    rt, reqs = serve_on_cluster(cfg, params, p, prompts, paged=True,
+                                max_inflight=2, steps=8,
+                                transport=InProcessTransport(
+                                    default_delay_s=1e-3))
+    assert rt.jobs, "nothing in flight before the failure"
+    rt.fail_node("n1")
+    new = replan_after_failure(p, "n1", MILPOptions(time_limit_s=5.0,
+                                                    lns_rounds=0,
+                                                    fgls_rounds=10))
+    rt.apply_plan(new)
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref
+    assert "n1" not in rt.engines
+    assert_pools_drained(rt)
 
 
 # --- property: any placement x depth x trace ---------------------------------

@@ -34,7 +34,8 @@ from repro.serving import (ClusterRuntime, FrameError, InProcessTransport,
                            WorkerChannel, decode_payload, encode_payload,
                            payload_bytes, recv_frame, send_frame)
 
-from harness import (EC, assert_serves_like_reference, make_plan)
+from harness import (EC, assert_serves_like_reference, make_disagg_plan,
+                     make_plan)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -101,6 +102,28 @@ def test_chaos_transport_keeps_outputs_identical(gqa_model, reference,
                                  transport=tr)
     # the chaos must actually have happened for the run to mean anything
     assert tr.duplicated > 0 and tr.dropped > 0
+
+
+@pytest.mark.parametrize("paged,depth", [(True, 1), (True, 2), (False, 2)],
+                         ids=["paged-d1", "paged-d2", "dense-d2"])
+def test_chaos_disaggregated_keeps_outputs_identical(gqa_model, reference,
+                                                     paged, depth):
+    """Chaos over the disaggregated dataflow: the prefill->decode KV
+    handoff payloads are delayed, reordered, duplicated, and dropped (then
+    retransmitted) along with everything else.  The handoff dedup key +
+    the kv_pending launch gate must keep outputs byte-identical — a
+    duplicated handoff may not double-import, a delayed one may not let
+    decode start on an empty cache."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 4)}, {"n1": (0, 2), "n2": (2, 4)})
+    tr = FlakyTransport(seed=29 * depth + paged)
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=paged, max_inflight=depth,
+                                      ec=CHAOS_EC, transport=tr)
+    assert rt.disaggregated
+    assert tr.duplicated > 0 and tr.dropped > 0
+    assert tr.transfers[("n0", "n1")] >= len(prompts)   # handoffs happened
 
 
 def test_chaos_transport_with_preemption(gqa_model, reference):
