@@ -33,7 +33,8 @@ def _register():
                                  bench_high_heterogeneity,
                                  bench_kv_quant,
                                  bench_pipelined_decode,
-                                 bench_single_cluster)
+                                 bench_single_cluster,
+                                 bench_spec_decode)
     BENCHES.update({
         "fig6_single_cluster": bench_single_cluster,
         "fig8_distributed": bench_distributed_cluster,
@@ -41,6 +42,7 @@ def _register():
         "pipelined_decode": bench_pipelined_decode,
         "kv_quant": bench_kv_quant,
         "direct_links": bench_direct_links,
+        "spec_decode": bench_spec_decode,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

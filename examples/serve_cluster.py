@@ -66,6 +66,12 @@ def main() -> None:
                          "node, full model) and a decode replica (remaining "
                          "nodes, even contiguous split); prompt KV ships "
                          "prefill -> decode over the transport")
+    ap.add_argument("--draft", default="",
+                    help="arch name of a coordinator-side draft model: "
+                         "greedy speculative decoding, --spec-tokens drafts "
+                         "verified per pipeline round-trip")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="with --draft: draft tokens per verify pass (gamma)")
     ap.add_argument("--check", action="store_true",
                     help="verify against one full engine: token-for-token "
                          "for param-dtype KV, tolerance (majority token "
@@ -109,19 +115,31 @@ def main() -> None:
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=4, max_len=64, prompt_len=16)
     kv_dtype = args.kv_dtype if args.kv_dtype != "param" else None
+    spec_kw = {}
+    if args.draft:
+        dcfg = get_smoke_config(args.draft)
+        if args.check:
+            dcfg = dataclasses.replace(dcfg, param_dtype="float32",
+                                       compute_dtype="float32")
+        print(f"draft: {dcfg.name} ({dcfg.num_layers}L d={dcfg.d_model}), "
+              f"spec_tokens={args.spec_tokens}")
+        spec_kw = dict(draft_cfg=dcfg,
+                       draft_params=init(dcfg, jax.random.key(0)),
+                       spec_tokens=args.spec_tokens)
     if args.transport == "socket":
         rt = ClusterRuntime.spawn_workers(cfg, params, p, ec,
                                           paged=not args.dense,
                                           kv_dtype=kv_dtype,
                                           max_inflight=args.max_inflight,
                                           stall_timeout_s=120.0,
-                                          direct_links=args.direct_links)
+                                          direct_links=args.direct_links,
+                                          **spec_kw)
     else:
         transport = InProcessTransport(default_delay_s=args.delay_ms * 1e-3,
                                        direct_links=args.direct_links)
         rt = ClusterRuntime(cfg, params, p, ec, paged=not args.dense,
                             transport=transport, kv_dtype=kv_dtype,
-                            max_inflight=args.max_inflight)
+                            max_inflight=args.max_inflight, **spec_kw)
     if not args.dense:
         for node, eng in sorted(rt.engines.items()):
             pages = eng.pool.num_pages if hasattr(eng, "pool") \
@@ -159,6 +177,9 @@ def main() -> None:
     describe = getattr(rt.transport, "describe", None)
     if callable(describe):
         print(f"transport: {describe()}")
+    if args.draft:
+        print(f"  {rt._spec_note()}")
+        assert rt.spec_rounds > 0, "draft attached but no verify rounds ran"
     for r in reqs[:3]:
         print(f"  req{r.request_id}: {r.output}")
     assert done == len(reqs), "not all requests completed"

@@ -93,18 +93,29 @@ def run_cluster(cfg, args) -> None:
     params = init(cfg, jax.random.key(0))
     ec = EngineConfig(max_batch=args.batch, max_len=args.max_len,
                       prompt_len=min(16, args.max_len))
+    spec_kw = {}
+    if args.draft:
+        # coordinator-side draft model for speculative decoding: any arch
+        # sharing the target's vocab works; quality only changes speed
+        dcfg = (get_smoke_config(args.draft) if args.smoke
+                else get_config(args.draft))
+        print(f"draft: {dcfg.name} ({dcfg.num_layers}L d={dcfg.d_model}), "
+              f"spec_tokens={args.spec_tokens}")
+        spec_kw = dict(draft_cfg=dcfg,
+                       draft_params=init(dcfg, jax.random.key(0)),
+                       spec_tokens=args.spec_tokens)
     if args.transport == "socket":
         rt = ClusterRuntime.spawn_workers(
             cfg, params, p, ec, paged=args.paged or not args.dense,
             page_size=args.page_size, kv_dtype=kv_dtype,
             max_inflight=args.max_inflight,
             connect=args.connect or None, stall_timeout_s=120.0,
-            direct_links=args.direct_links)
+            direct_links=args.direct_links, **spec_kw)
     else:
         rt = ClusterRuntime(cfg, params, p, ec,
                             paged=args.paged or not args.dense,
                             page_size=args.page_size, kv_dtype=kv_dtype,
-                            max_inflight=args.max_inflight)
+                            max_inflight=args.max_inflight, **spec_kw)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
                     max_new_tokens=args.new_tokens)
@@ -121,6 +132,8 @@ def run_cluster(cfg, args) -> None:
               + " -> ".join(s.node for s in rt.served[r.request_id].stages))
     print(f"cluster: {len(reqs)} reqs, {toks} tokens in {dt:.2f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s)")
+    if args.draft:
+        print(f"  {rt._spec_note()}")
     print("sampled ids:", [r.output for r in reqs[:2]])
     rt.shutdown()                      # reap worker processes (socket runs)
 
@@ -162,6 +175,13 @@ def main() -> None:
                          "wait for externally started workers (python -m "
                          "repro.launch.worker --connect HOST:PORT) instead "
                          "of spawning local subprocesses")
+    ap.add_argument("--draft", default="",
+                    help="with --cluster: arch name of a coordinator-side "
+                         "draft model for greedy speculative decoding "
+                         "(must share the target's vocab)")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="with --draft: draft tokens proposed per verify "
+                         "round-trip (gamma)")
     ap.add_argument("--direct-links", action="store_true",
                     help="with --transport socket: stage workers forward "
                          "activation frames to the next stage's worker over "

@@ -231,9 +231,17 @@ class StageWorker:
                 return None
             return out
         if method == "decode_stage":
-            items = [DecodeItem(slot=s, pos=p, entry=e, token=t,
-                                h=self._resolve(h))
-                     for s, p, e, t, h in args[0]]
+            # wire items are 6-tuples since speculative decoding: a trailing
+            # ``tokens`` vector marks a multi-token verify pass; both ``h``
+            # and ``tokens`` may arrive as StagedRefs pushed by a peer
+            items = []
+            for w in args[0]:
+                s, p, e, t, h = w[:5]
+                tk = self._resolve(w[5]) if len(w) > 5 and w[5] is not None \
+                    else None
+                items.append(DecodeItem(
+                    slot=s, pos=p, entry=e, token=t, h=self._resolve(h),
+                    tokens=None if tk is None else [int(x) for x in tk]))
             fwds = args[1] if len(args) > 1 else None
             outs = eng.decode_stage(items)
             reply = []
@@ -264,6 +272,8 @@ class StageWorker:
             return eng.ensure(args[0], args[1])
         if method == "release":
             return eng.release(args[0])
+        if method == "rollback":
+            return eng.rollback(args[0], args[1])
         if method == "kv_tokens_used":
             return eng.kv_tokens_used()
         if method == "kv_tokens_capacity":

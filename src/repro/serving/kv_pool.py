@@ -197,6 +197,32 @@ class PagePool:
         self.table[:, slot, :] = 0
         self._nblocks[slot] = 0
 
+    def truncate(self, slot: int, tokens: int) -> None:
+        """Shrink ``slot``'s allocation to hold exactly ``tokens`` rows —
+        the page-frontier rollback primitive for rejected speculative
+        drafts.  Blocks past the new frontier go back to the free list in
+        one batched push (``alloc_ops`` counts it like ensure/release).
+
+        Rolled-back rows inside the *kept* frontier block are not zeroed
+        here: param-dtype attention masks them by position, and on the int8
+        path ``quantized_append`` recomputes a page's scale purely from its
+        live rows (zeroing rows past the append window first), so a freed
+        page self-cleans on reuse.  The int8-exact restore of the kept
+        frontier page's bytes+scales is the engine's job (it snapshots the
+        page after each verify sub-step — see PagedStageEngine.rollback)."""
+        target = -(-tokens // self.page)
+        nb = int(self._nblocks[slot])
+        if target >= nb:
+            return
+        n = (nb - target) * self.num_layers
+        # push order matches release: block outer, layer fastest
+        self._free[self._free_top:self._free_top + n] = \
+            self.table[:, slot, target:nb].T.reshape(-1)
+        self._free_top += n
+        self.table[:, slot, target:nb] = 0
+        self._nblocks[slot] = target
+        self.alloc_ops += 1
+
 
 def full_rectangle_pages(cfg: ModelConfig, *, max_batch: int, max_len: int,
                          page_size: int,

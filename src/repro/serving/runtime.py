@@ -58,6 +58,28 @@ verbatim) ships to the decode nodes that need it (``export_kv`` →
 ``kv_pending`` draining; prefill-only slots are released once their
 handoffs land.
 
+Speculative decoding (``draft_cfg``/``spec_tokens``): a small draft model
+sharing the target's vocab lives AT the coordinator (a dense full-model
+``StageEngine``).  Each round the draft proposes γ tokens autoregressively;
+the target verifies all γ+1 positions in ONE pass through the decode
+pipeline (the stage engines run it as position-ordered sub-batches, so the
+KV write history — including int8 page requantization — is byte-identical
+to γ+1 ordinary decode steps).  The final stage returns the greedy argmax
+vector; the coordinator accepts the longest matching draft prefix, confirms
+those tokens in order (plus the bonus token at full acceptance), and on the
+first mismatch bumps the job epoch (extending the PR 4 ``cancelled_inflight``
+path — straggling duplicates of the dead pass cannot decode after the
+rollback) and synchronously rolls every decode stage node back to the
+accepted prefix (``rollback`` RPC: page-frontier truncation + int8 frontier-
+page restore).  Greedy speculative output is byte-identical to
+non-speculative greedy for ANY draft — acceptance rate only changes speed.
+Speculation requires ``temperature <= 0``; other requests (and requests
+that find the draft's slots full) serve non-speculatively.  Spec jobs keep
+exactly one verify pass in flight and launch only from the coordinator
+(the draft lives there), so they compose with ``max_inflight`` windows,
+disaggregated prefill (launches stay gated on ``kv_pending``) and failover
+unchanged.
+
 Failover: ``fail_node`` drops a node's engine and requeues every in-flight
 request whose route crossed it; after the planner replans, ``apply_plan``
 rebuilds engines whose slices changed, swaps IWRR weights
@@ -141,6 +163,9 @@ class InProcessTransport(Transport):
         self.direct_links = direct_links
         self.transfers: Dict[Tuple[str, str], int] = defaultdict(int)
         self.bytes_sent: Dict[Tuple[str, str], float] = defaultdict(float)
+        # runtime-maintained one-liners appended to describe() (e.g. the
+        # speculation counters, shown next to the hop/byte counters)
+        self.annotations: Dict[str, str] = {}
 
     def delay(self, src: str, dst: str, nbytes: float) -> float:
         d = self.link_delay_s.get((src, dst), self.default_delay_s)
@@ -170,7 +195,9 @@ class InProcessTransport(Transport):
         frags = [f"{s}->{d}={n}/{self.bytes_sent[(s, d)]:.0f}B"
                  for (s, d), n in sorted(self.transfers.items())]
         mode = "direct" if self.direct_links else "star"
-        return f"hops[{mode}: " + ", ".join(frags) + "]"
+        extra = "".join(f" {v}" for _, v in
+                        sorted(getattr(self, "annotations", {}).items()))
+        return f"hops[{mode}: " + ", ".join(frags) + "]" + extra
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +255,13 @@ class _Job:
     # -- delivery hardening (a Transport may duplicate or reorder) -------
     seen: set = dataclasses.field(default_factory=set)
                                      # dedup keys of deliveries already run
+    # -- speculative decoding (draft-model) ------------------------------
+    draft_slot: Optional[int] = None  # coordinator draft-engine slot
+    draft_pos: int = 0               # next draft row to feed (rows below
+                                     # hold tokens the draft has consumed)
+    spec_drafts: List[int] = dataclasses.field(default_factory=list)
+                                     # γ proposals of the in-flight verify
+    spec_base: int = 0               # cache position of the verify pass
     hop_next: Dict[int, int] = dataclasses.field(default_factory=dict)
                                      # per-stage next expected chunk offset
     hop_stash: Dict[int, Dict[int, Any]] = dataclasses.field(
@@ -261,7 +295,9 @@ class ClusterRuntime:
                  max_inflight: int = 1,
                  engine_factory: Optional[Callable[["ClusterRuntime", str,
                                                     LayerRange], Any]] = None,
-                 stall_timeout_s: float = 60.0):
+                 stall_timeout_s: float = 60.0,
+                 draft_cfg: Optional[ModelConfig] = None, draft_params=None,
+                 spec_tokens: int = 4):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cfg = cfg
@@ -296,6 +332,34 @@ class ClusterRuntime:
         else:
             self.transport.bind(lambda d, fn: self._push(self._now + d, fn))
         self._chunked = paged and all_blocks_paged(cfg)
+
+        # -- speculative decoding: coordinator-side draft model ----------
+        self.spec_tokens = spec_tokens
+        self.draft_cfg = draft_cfg
+        self.draft = None
+        if draft_cfg is not None:
+            if draft_params is None:
+                raise ValueError("draft_cfg given without draft_params")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft {draft_cfg.name} vocab {draft_cfg.vocab_size} "
+                    f"!= target {cfg.name} vocab {cfg.vocab_size}")
+            if spec_tokens < 1:
+                raise ValueError(
+                    f"spec_tokens must be >= 1, got {spec_tokens}")
+            # a full tiny model living at the coordinator; dense positional
+            # caches make rejected speculative rows free to overwrite, and
+            # sharing engine_cfg keeps slot/row budgets aligned with the
+            # target's
+            self.draft = StageEngine(draft_cfg, draft_params,
+                                     LayerRange(0, draft_cfg.num_layers),
+                                     engine_cfg, rng_seed=rng_seed)
+        self.spec_proposed = 0       # draft tokens sent to verification
+        self.spec_accepted = 0       # draft tokens matching target greedy
+        self.spec_rejected = 0       # draft tokens rolled back
+        self.spec_rounds = 0         # verify round trips
+        self.spec_confirmed = 0      # tokens confirmed by verify rounds
+                                     # (accepted prefix + 1 per round)
 
         self.workers: Dict[str, Any] = {}   # node -> worker process handle
         self.engines: Dict[str, Any] = {}
@@ -492,10 +556,11 @@ class ClusterRuntime:
         ready = {n: len(v) for n, v in self._ready.items() if v}
         describe = getattr(self.transport, "describe", None)
         extra = f" transport={describe()}" if callable(describe) else ""
+        spec = self._spec_note()
         return (f"queued={len(self.queue)} "
                 f"in_flight(confirmed+window)={windows} "
                 f"pending_events={len(self._events)} ready={ready} "
-                f"now={self._now:.6f}" + extra)
+                f"now={self._now:.6f}" + (f" {spec}" if spec else "") + extra)
 
     def step(self) -> bool:
         """One runtime iteration: admit, drain deliveries due now, then one
@@ -624,6 +689,18 @@ class ClusterRuntime:
             job.seen = set()
             job.hop_next = {}
             job.hop_stash = {}
+            # speculation: take a draft slot and prefill the draft with the
+            # same tokens the target saw; greedy-only — sampled requests
+            # (and requests that find the draft full) serve non-speculative
+            job.draft_slot = None
+            job.draft_pos = 0
+            if self.draft is not None and job.req.temperature <= 0:
+                dslot = self.draft.alloc_slot(job.req.request_id)
+                if dslot is not None:
+                    self.draft.prefill_stage(dslot,
+                                             self._prefill_tokens(job), 0)
+                    job.draft_slot = dslot
+                    job.draft_pos = job.pos
             job.seq = self._jseq
             self._jseq += 1
             self.jobs[job.req.request_id] = job
@@ -865,48 +942,214 @@ class ClusterRuntime:
                 return
             self._maybe_launch(job, COORDINATOR, t, len(req.output))
 
+    # -- speculative verify results (coordinator) -----------------------------
+    def _on_spec_result(self, job: _Job, epoch: int, j: int, greedy) -> None:
+        """A verify pass's greedy vector reached the coordinator: accept
+        the longest draft prefix, confirm those tokens (plus the bonus
+        token) strictly in order, and on the first mismatch bump the epoch
+        and roll every decode stage node back to the accepted prefix."""
+        if job.epoch != epoch:
+            return
+        key = ("spec", j, epoch)
+        if key in job.seen:
+            return                      # duplicated delivery (chaos link)
+        job.seen.add(key)
+        req = job.req
+        drafts = job.spec_drafts
+        greedy = [int(t) for t in np.asarray(greedy).reshape(-1)]
+        gamma = len(greedy) - 1
+        a = 0
+        while a < gamma and drafts[a] == greedy[a]:
+            a += 1
+        self.spec_accepted += a
+        self.spec_rejected += gamma - a
+        base = job.spec_base
+        # draft rows base+1..base+min(a, γ-1) hold proposals the target
+        # just confirmed — the draft need not re-consume them next round
+        job.draft_pos = max(job.draft_pos, base + 1 + min(a, gamma - 1))
+        for t in greedy[:a + 1]:
+            req.output.append(int(t))
+            self.tokens_produced += 1
+            self.spec_confirmed += 1
+            job.pos += 1
+            reason = self._stop_reason(job)
+            if reason is not None:
+                # early stop inside the accepted prefix: completion releases
+                # every slot wholesale — no rollback needed
+                self._complete(job, reason)
+                self._spec_annotate()
+                return
+        if a < gamma:
+            # rejection: cancel the optimistic window (the PR 4
+            # cancelled_inflight path) and bump the epoch so straggling
+            # duplicates of the dead pass cannot decode after the rollback
+            keep = base + a + 1
+            self.cancelled_inflight += max(0, job.inflight)
+            job.epoch += 1
+            job.next_j = len(req.output)
+            job.next_pos = keep
+            self._rollback_job(job, keep)
+        self._spec_annotate()
+        self._maybe_launch(job, COORDINATOR, int(req.output[-1]),
+                           len(req.output))
+
+    def _rollback_job(self, job: _Job, keep: int) -> None:
+        """Synchronously truncate the job's KV to ``keep`` rows on every
+        decode stage node (an RPC for remote engines), so the relaunched
+        pass cannot race the rollback.  The draft engine needs no rollback:
+        its dense caches are positional and ``draft_pos`` already points at
+        the last confirmed row."""
+        done = set()
+        for st in job.pipe.stages:
+            if st.node in done:
+                continue
+            done.add(st.node)
+            eng = self.engines.get(st.node)
+            slot = job.slots.get(st.node)
+            if eng is None or slot is None:
+                continue
+            eng.rollback(slot, keep)
+
+    def _spec_note(self) -> str:
+        if self.draft is None:
+            return ""
+        return (f"spec[proposed={self.spec_proposed} "
+                f"accepted={self.spec_accepted} "
+                f"rejected={self.spec_rejected} "
+                f"rate={self.spec_acceptance_rate:.2f} "
+                f"tokens/rt={self.spec_tokens_per_round_trip:.2f}]")
+
+    def _spec_annotate(self) -> None:
+        ann = getattr(self.transport, "annotations", None)
+        if ann is not None:
+            ann["spec"] = self._spec_note()
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target's greedy pass accepted."""
+        return self.spec_accepted / max(1, self.spec_proposed)
+
+    @property
+    def spec_tokens_per_round_trip(self) -> float:
+        """Tokens confirmed per verify round trip (1 + accepted prefix;
+        the in-flight-window-only baseline is 1 by construction)."""
+        return self.spec_confirmed / max(1, self.spec_rounds)
+
     # -- decode pass launch (window) -----------------------------------------
+    def _spec_gamma(self, job: _Job) -> int:
+        """Draft length for the next verify round, clamped so every
+        position could still be confirmed: the round produces output
+        indices ``next_j .. next_j+γ`` (full acceptance exactly reaches
+        ``max_new_tokens``) and writes cache rows ``next_pos .. next_pos+γ``
+        (staying under ``max_len``)."""
+        return max(0, min(self.spec_tokens,
+                          job.req.max_new_tokens - job.next_j - 1,
+                          self.ec.max_len - 1 - job.next_pos))
+
+    def _draft_propose(self, job: _Job, gamma: int) -> List[int]:
+        """Run the coordinator-side draft autoregressively: catch up on
+        confirmed tokens it has not yet consumed (one multi-token decode
+        over rows ``draft_pos..next_pos``), then propose ``gamma`` greedy
+        tokens.  Rejected speculative rows from earlier rounds are simply
+        overwritten — dense caches are positional and mask by pos."""
+        eng, slot = self.draft, job.draft_slot
+        req = job.req
+        P = len(req.prompt)
+        p = job.next_pos
+
+        def tok_at(r: int) -> int:
+            # row r >= P holds output[r - P] (prefill fed prompt+output
+            # contiguously, so this covers resumed requests too)
+            return int(req.prompt[r]) if r < P else int(req.output[r - P])
+
+        catch = [tok_at(r) for r in range(job.draft_pos, p + 1)]
+        out = eng.decode_stage([DecodeItem(slot=slot, pos=job.draft_pos,
+                                           entry=0, tokens=catch)])[0]
+        logits = np.asarray(out.logits)
+        cur = int(np.argmax(logits[-1] if logits.ndim == 2 else logits))
+        drafts = [cur]
+        for s in range(1, gamma):
+            out = eng.decode_stage([DecodeItem(slot=slot, pos=p + s,
+                                               entry=0, token=cur)])[0]
+            cur = int(np.argmax(out.logits))
+            drafts.append(cur)
+        job.draft_pos = p + 1        # rows 0..p are now confirmed-consumed
+        return drafts
+
     def _maybe_launch(self, job: _Job, src: str, tok: int, expect_j: int
                       ) -> None:
         """Launch the decode pass producing output index ``expect_j`` if no
         one else has (the final stage races the coordinator for it), the
         hard budgets allow it to ever be confirmed, and the in-flight window
         has room.  Sampled-token speculation (eos still unseen by the
-        coordinator) launches anyway — completion cancels it by epoch."""
+        coordinator) launches anyway — completion cancels it by epoch.
+
+        Jobs holding a draft slot launch *verify* passes instead: γ draft
+        proposals ride with the confirmed token as one multi-token pass.
+        Only the coordinator can launch them (the draft lives there), and
+        exactly one verify pass is in flight per request — the optimistic
+        window ``next_j = j+γ+1`` closes the window until the round
+        confirms or rolls back."""
         req = job.req
+        spec = job.draft_slot is not None
+        if spec and src != COORDINATOR:
+            return                   # final stage cannot draft
         if req.done or job.next_j != expect_j:
             return
         if job.kv_pending:
             return                   # decode KV still in flight from prefill
         if job.next_j >= req.max_new_tokens or job.next_pos >= self.ec.max_len:
             return                   # pass could never be confirmed
-        if job.inflight >= self.max_inflight:
+        if spec and job.inflight != 0:
+            return                   # one verify round in flight at a time
+        if job.inflight >= self.max_inflight and not spec:
             return                   # window full: coordinator relaunches
+        gamma = self._spec_gamma(job) if spec else 0
         pos, j, epoch = job.next_pos, job.next_j, job.epoch
-        if not self._reserve_inflight(job, pos + 1):
+        if not self._reserve_inflight(job, pos + gamma + 1):
             return                   # job itself was preempted reserving
+        first = job.pipe.stages[0].node
+        if gamma >= 1:
+            drafts = self._draft_propose(job, gamma)
+            job.spec_drafts = drafts
+            job.spec_base = pos
+            job.next_j = j + gamma + 1     # optimistic: rolled back on
+            job.next_pos = pos + gamma + 1  # rejection (epoch bump)
+            self.spec_rounds += 1
+            self.spec_proposed += gamma
+            toks = np.asarray([int(tok)] + drafts, np.int32)
+            self._send(src, first, toks,
+                       (gamma + 1) * self.profile.token_bytes,
+                       lambda t, e=epoch, p=pos, jj=j, n=gamma + 1:
+                       self._enqueue_decode(job, e, 0, 0, None, p, jj,
+                                            toks=t, spec=True, nt=n))
+            return
         job.next_j = j + 1
         job.next_pos = pos + 1
-        first = job.pipe.stages[0].node
         self._send(src, first, int(tok), self.profile.token_bytes,
                    lambda t, e=epoch, p=pos, jj=j:
                    self._enqueue_decode(job, e, 0, int(t), None, p, jj))
 
     def _enqueue_decode(self, job: _Job, epoch: int, si: int, tok: int,
-                        h, pos: int, j: int) -> None:
+                        h, pos: int, j: int, toks=None, spec: bool = False,
+                        nt: int = 1) -> None:
         """Delivery guard for decode stage-work: a duplicated delivery of
         the same (stage, output-index) pass is dropped — running it twice
         would double-decode the pass (and two copies in one batch would
-        trip the engine's duplicate-slot invariant)."""
+        trip the engine's duplicate-slot invariant).  The epoch is part of
+        the key: after a rejected verify rolls a job back, the same output
+        index relaunches under a bumped epoch and must not be mistaken for
+        a duplicate of the cancelled pass."""
         if job.epoch != epoch:
             return
-        key = ("dw", si, j)
+        key = ("dw", si, j, epoch)
         if key in job.seen:
             return
         job.seen.add(key)
         node = job.pipe.stages[si].node
         self._ready[node].append(dict(job=job, epoch=epoch, si=si, tok=tok,
-                                      h=h, pos=pos, j=j))
+                                      h=h, pos=pos, j=j, toks=toks,
+                                      spec=spec, nt=nt))
 
     def _grow_or_preempt(self, eng, node: str, job: _Job, tokens: int
                          ) -> bool:
@@ -950,7 +1193,7 @@ class ClusterRuntime:
             job = w["job"]
             if job.epoch != w["epoch"]:
                 continue
-            self._grow_or_preempt(eng, node, job, w["pos"] + 1)
+            self._grow_or_preempt(eng, node, job, w["pos"] + w.get("nt", 1))
         while work:
             batch = [w for w in work[:self.ec.max_batch]
                      if w["job"].epoch == w["epoch"]]
@@ -960,7 +1203,8 @@ class ClusterRuntime:
             items = [DecodeItem(slot=w["job"].slots[node], pos=w["pos"],
                                 entry=w["job"].pipe.stages[w["si"]]
                                 .layers.start,
-                                token=w["tok"], h=w["h"]) for w in batch]
+                                token=w["tok"], h=w["h"],
+                                tokens=w.get("toks")) for w in batch]
             fwds = None
             if getattr(eng, "forward_capable", False) and \
                     getattr(self.transport, "direct_links", False):
@@ -977,6 +1221,20 @@ class ClusterRuntime:
             for w, out in zip(batch, outs):
                 job, si, epoch, j = w["job"], w["si"], w["epoch"], w["j"]
                 if si == len(job.pipe.stages) - 1:
+                    if w.get("spec"):
+                        # verify pass: no sampling, no node-side launch —
+                        # the greedy argmax vector (one per verified
+                        # position; identical to what sample() computes at
+                        # temperature <= 0) returns to the coordinator,
+                        # which owns acceptance and rollback
+                        greedy = np.asarray(
+                            np.argmax(np.asarray(out.logits), axis=-1),
+                            np.int32).reshape(-1)
+                        self._send(node, COORDINATOR, (j, greedy),
+                                   len(greedy) * self.profile.token_bytes,
+                                   lambda p, jb=job, e=epoch:
+                                   self._on_spec_result(jb, e, p[0], p[1]))
+                        continue
                     tok = eng.sample(out.logits, job.req.temperature)
                     self._send(node, COORDINATOR, (j, tok),
                                self.profile.token_bytes,
@@ -987,10 +1245,13 @@ class ClusterRuntime:
                     self._maybe_launch(job, node, tok, j + 1)
                 else:
                     nxt = job.pipe.stages[si + 1].node
-                    self._send(node, nxt, out.h, self._act_bytes(1),
+                    n = w.get("nt", 1)
+                    self._send(node, nxt, out.h, self._act_bytes(n),
                                lambda h, jb=job, e=epoch, s=si + 1,
-                               p=w["pos"], jj=j:
-                               self._enqueue_decode(jb, e, s, 0, h, p, jj))
+                               p=w["pos"], jj=j, sp=w.get("spec", False),
+                               nn=n:
+                               self._enqueue_decode(jb, e, s, 0, h, p, jj,
+                                                    spec=sp, nt=nn))
 
     # -- completion / preemption ---------------------------------------------
     def _release_all(self, job: _Job) -> None:
@@ -999,6 +1260,10 @@ class ClusterRuntime:
             if eng is not None:
                 eng.release(slot)
         job.slots = {}
+        if job.draft_slot is not None and self.draft is not None:
+            self.draft.release(job.draft_slot)
+        job.draft_slot = None
+        job.draft_pos = 0
 
     def _complete(self, job: _Job, reason: str) -> None:
         req = job.req

@@ -29,7 +29,7 @@ as genuinely different pool depths per node.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -50,19 +50,46 @@ from .sampling import sample_token
 
 @dataclasses.dataclass
 class DecodeItem:
-    """One request's decode-step input resident at a node this iteration."""
+    """One request's decode-step input resident at a node this iteration.
+
+    A single-token item carries ``token`` (entry 0) or ``h`` of shape
+    (1, 1, d).  A speculative verify pass carries ``tokens`` — the last
+    confirmed token followed by the draft proposals, consumed at positions
+    ``pos .. pos+n-1`` — or, downstream of the entry stage, ``h`` of shape
+    (n, 1, d).  The engines run multi-token items as ``n`` position-ordered
+    sub-steps, so the KV write history (and on int8 pools the per-page
+    requantization history) is byte-identical to ``n`` ordinary decode
+    steps — acceptance rate can only change speed, never bytes."""
 
     slot: int
-    pos: int                      # absolute position of the token/activation
+    pos: int                      # absolute position of the FIRST token
     entry: int                    # request's entry layer at this node
     token: int = 0                # consumed only when entry == 0
-    h: Optional[np.ndarray] = None  # (1, 1, d) incoming activations
+    h: Optional[np.ndarray] = None  # (n, 1, d) incoming activations
+    tokens: Optional[Sequence[int]] = None  # verify pass (entry == 0 only)
+
+    @property
+    def n(self) -> int:
+        """Token count of this item (1 for ordinary decode)."""
+        if self.tokens is not None:
+            return len(self.tokens)
+        if self.h is not None and getattr(self.h, "ndim", 0) == 3:
+            return int(self.h.shape[0])
+        return 1
+
+    def substep(self, s: int) -> "DecodeItem":
+        """The single-token item for sub-step ``s`` (position ``pos + s``)."""
+        return DecodeItem(
+            slot=self.slot, pos=self.pos + s, entry=self.entry,
+            token=int(self.tokens[s]) if self.tokens is not None
+            else self.token,
+            h=None if self.h is None else np.asarray(self.h[s:s + 1]))
 
 
 @dataclasses.dataclass
 class DecodeOut:
-    h: Optional[np.ndarray]       # (1, 1, d) outgoing activations
-    logits: Optional[np.ndarray]  # (V,) — final stage only
+    h: Optional[np.ndarray]       # (n, 1, d) outgoing activations
+    logits: Optional[np.ndarray]  # (V,) — or (n, V) for a verify pass
 
 
 class _StageEngineBase:
@@ -121,10 +148,10 @@ class _StageEngineBase:
                              f"{self.ec.max_batch} slots")
         # one batched step gathers/scatters each cache row once, so a batch
         # holding tokens t and t+1 of one request would lose t's KV write.
-        # The runtime upholds this by construction (pass t+1 is only born
-        # when pass t exits the final stage, so one pass per request is in
-        # the stages at a time); this guard is the invariant check — true
-        # multi-token speculation would need position-ordered sub-batches.
+        # Multi-token speculation is handled above this guard: decode_stage
+        # splits verify items into position-ordered sub-batches, each of
+        # which reaches _assemble with one token per request — so within
+        # any assembled batch slots are still unique by construction.
         slots = [it.slot for it in items]
         if len(set(slots)) != len(slots):
             raise ValueError(
@@ -147,12 +174,67 @@ class _StageEngineBase:
         return (jnp.asarray(idx), jnp.asarray(tok), jnp.asarray(pos),
                 jnp.asarray(entry), jnp.asarray(h_in))
 
-    def _emit(self, items: List[DecodeItem], h_out, logits) -> List[DecodeOut]:
-        h_np = np.asarray(h_out)
-        l_np = np.asarray(logits) if logits is not None else None
-        return [DecodeOut(h=h_np[i:i + 1],
-                          logits=l_np[i] if l_np is not None else None)
-                for i in range(len(items))]
+    # -- decode orchestration ---------------------------------------------
+    def _decode_step(self, items: List[DecodeItem]):
+        """One batched single-token decode step.  Returns (h, logits) as
+        numpy arrays of shape (len(items), 1, d) and (len(items), V) (or
+        None off the final stage)."""
+        raise NotImplementedError
+
+    def _spec_begin(self, it: DecodeItem) -> None:
+        """Hook before a multi-token item's first sub-step (clears any
+        stale rollback snapshots for the slot)."""
+
+    def _snap_substep(self, it: DecodeItem, s: int) -> None:
+        """Hook after a multi-token item's sub-step ``s`` committed its KV
+        write — int8 pools snapshot the frontier page for exact rollback."""
+
+    def rollback(self, slot: int, tokens: int) -> None:
+        """Forget ``slot``'s rows >= ``tokens`` (rejected draft suffix)."""
+        raise NotImplementedError
+
+    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+        """ONE batched decode step over the stage-work resident this
+        iteration.  Multi-token (speculative verify) items are run as
+        position-ordered sub-batches: sub-step ``s`` batches the s-th token
+        of every item that has one, so a request's token at ``pos+s``
+        decodes strictly after its KV write at ``pos+s-1`` — the same write
+        history as ``n`` ordinary decode steps, which is what keeps greedy
+        speculative output byte-identical (dense, paged and int8 alike)."""
+        n = max(it.n for it in items)
+        if n == 1:
+            # normalize length-1 ``tokens`` items into plain token items
+            items = [it if it.tokens is None else it.substep(0)
+                     for it in items]
+            h, l = self._decode_step(items)
+            return [DecodeOut(h=h[i:i + 1],
+                              logits=l[i] if l is not None else None)
+                    for i in range(len(items))]
+        for it in items:
+            if it.n > 1:
+                self._spec_begin(it)
+        hs: List[List[np.ndarray]] = [[] for _ in items]
+        ls: List[List[np.ndarray]] = [[] for _ in items]
+        for s in range(n):
+            sel = [i for i, it in enumerate(items) if s < it.n]
+            sub = [items[i].substep(s) for i in sel]
+            h, l = self._decode_step(sub)
+            for k, i in enumerate(sel):
+                hs[i].append(h[k:k + 1])
+                if l is not None:
+                    ls[i].append(l[k])
+                if items[i].n > 1:
+                    self._snap_substep(items[i], s)
+        outs = []
+        for i, it in enumerate(items):
+            if it.n == 1:   # keep single-token output shapes: (1,1,d) / (V,)
+                outs.append(DecodeOut(h=hs[i][0],
+                                      logits=ls[i][0] if ls[i] else None))
+            else:
+                outs.append(DecodeOut(
+                    h=np.concatenate(hs[i], axis=0),
+                    logits=np.stack(ls[i], axis=0) if ls[i] else None))
+        return outs
 
 
 def _splice(full, one, slot: int):
@@ -201,13 +283,20 @@ class StageEngine(_StageEngineBase):
         self._active_tokens[slot] = S
         return np.asarray(out)[0] if self.is_last else np.asarray(out)
 
-    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+    def _decode_step(self, items: List[DecodeItem]):
         idx, tok, pos, entry, h_in = self._assemble(items)
         h, logits, self.caches = self._decode(self.sparams, self.caches, tok,
                                               h_in, entry, pos, idx)
         for it in items:
             self._active_tokens[it.slot] = it.pos + 1
-        return self._emit(items, h, logits)
+        return (np.asarray(h),
+                np.asarray(logits) if logits is not None else None)
+
+    def rollback(self, slot: int, tokens: int) -> None:
+        """Dense caches are positional and attention masks rows >= pos, so
+        forgetting a rejected draft suffix is pure bookkeeping — relaunched
+        tokens overwrite their rows in place."""
+        self._active_tokens[slot] = tokens
 
     def release(self, slot: int) -> None:
         self._active_tokens[slot] = 0
@@ -309,12 +398,15 @@ class PagedStageEngine(_StageEngineBase):
 
         self._decode = jax.jit(decode_fn,
                                donate_argnums=() if on_cpu else (7, 8, 9, 10))
+        # per-slot {kept_tokens: {page_id: (k, v, ks, vs)}} verify snapshots
+        self._spec_snaps: Dict[int, Dict[int, dict]] = {}
 
     # -- pool ------------------------------------------------------------
     def ensure(self, slot: int, tokens: int) -> bool:
         return self.pool.ensure(slot, tokens)
 
     def release(self, slot: int) -> None:
+        self._spec_snaps.pop(slot, None)
         self.pool.release(slot)
         self.free_slot(slot)
 
@@ -435,7 +527,7 @@ class PagedStageEngine(_StageEngineBase):
         self.caches = new
 
     # -- decode ----------------------------------------------------------
-    def decode_stage(self, items: List[DecodeItem]) -> List[DecodeOut]:
+    def _decode_step(self, items: List[DecodeItem]):
         idx, tok, pos, entry, h_in = self._assemble(items)
         tables = jnp.asarray(self.pool.table)
         pool = self.pool
@@ -443,7 +535,56 @@ class PagedStageEngine(_StageEngineBase):
          pool.k_scales, pool.v_scales) = self._decode(
             self.sparams, self.caches, tok, h_in, entry, pos, idx,
             pool.k, pool.v, pool.k_scales, pool.v_scales, tables)
-        return self._emit(items, h, logits)
+        return (np.asarray(h),
+                np.asarray(logits) if logits is not None else None)
+
+    # -- speculative rollback --------------------------------------------
+    def _spec_begin(self, it: DecodeItem) -> None:
+        if self.pool.quantized:
+            self._spec_snaps[it.slot] = {}
+
+    def _snap_substep(self, it: DecodeItem, s: int) -> None:
+        """After verify sub-step ``s`` wrote row ``it.pos + s``, snapshot
+        each paged layer's frontier page (bytes + scales), keyed by the
+        token count a rollback to this sub-step would keep.
+
+        Needed because ``quantized_append`` requantizes the whole touched
+        page: a later — ultimately rejected — sub-step landing in the same
+        page can raise its absmax scale and perturb the kept rows' bytes.
+        Truncation alone cannot undo that; restoring this snapshot can."""
+        if not self.pool.quantized:
+            return           # row-granular writes: truncation is byte-exact
+        pool = self.pool
+        pos = it.pos + s
+        snaps = {}
+        for li in range(pool.num_layers):
+            pid = int(pool.table[li, it.slot, pos // pool.page])
+            snaps[pid] = (np.asarray(pool.k[pid]), np.asarray(pool.v[pid]),
+                          np.asarray(pool.k_scales[pid]),
+                          np.asarray(pool.v_scales[pid]))
+        self._spec_snaps.setdefault(it.slot, {})[pos + 1] = snaps
+
+    def rollback(self, slot: int, tokens: int) -> None:
+        """Truncate ``slot``'s KV to ``tokens`` rows after a partially
+        rejected verify pass.  int8 pools additionally restore the kept
+        frontier pages from the matching sub-step snapshot, leaving the
+        pool byte-identical to a history that only ever decoded the
+        accepted prefix; freed blocks self-clean on reuse because
+        ``quantized_append`` zeroes rows past the append window before
+        computing scales."""
+        pool = self.pool
+        snaps = self._spec_snaps.pop(slot, None)
+        if pool.quantized and snaps:
+            snap = snaps.get(tokens)
+            if snap is not None:
+                for pid, (k, v, ks, vs) in snap.items():
+                    pool.k = pool.k.at[pid].set(jnp.asarray(k))
+                    pool.v = pool.v.at[pid].set(jnp.asarray(v))
+                    pool.k_scales = pool.k_scales.at[pid].set(
+                        jnp.asarray(ks))
+                    pool.v_scales = pool.v_scales.at[pid].set(
+                        jnp.asarray(vs))
+        pool.truncate(slot, tokens)
 
 
 def make_stage_engine(cfg: ModelConfig, params, layers: LayerRange,

@@ -405,6 +405,9 @@ class SocketTransport:
         self.transfers: Dict[Tuple[str, str], int] = defaultdict(int)
         self.bytes_sent: Dict[Tuple[str, str], int] = defaultdict(int)
         self.dead: set = set()
+        # runtime-maintained one-liners appended to describe() (e.g. the
+        # speculation counters, shown next to the hop/byte counters)
+        self.annotations: Dict[str, str] = {}
         self._queues: Dict[Tuple[str, str], queue.Queue] = {}
         self._busy_since: Dict[Tuple[str, str], float] = {}
         self._tags = itertools.count(1)
@@ -524,8 +527,9 @@ class SocketTransport:
         hops = ", ".join(
             f"{s}->{d}={n}/{self.bytes_sent[(s, d)]}B"
             for (s, d), n in sorted(self.transfers.items()))
+        extra = "".join(f" {v}" for _, v in sorted(self.annotations.items()))
         return ("links[" + ", ".join(frags) + "]" + dead
-                + f" hops[{mode}: {hops}]")
+                + f" hops[{mode}: {hops}]" + extra)
 
     def close(self) -> None:
         self._stop.set()
@@ -599,7 +603,11 @@ class RemoteStageEngine:
     def decode_stage(self, items: List[DecodeItem],
                      fwds: Optional[List[Optional[Tuple[str, int]]]] = None
                      ) -> List[DecodeOut]:
-        wire = [(it.slot, it.pos, it.entry, it.token, it.h) for it in items]
+        # 6-tuple wire format: ``tokens`` (a verify pass's token vector, or
+        # None) rides last so old captures stay readable; the worker
+        # resolves StagedRefs in both ``h`` and ``tokens``
+        wire = [(it.slot, it.pos, it.entry, it.token, it.h, it.tokens)
+                for it in items]
         outs = self.channel.call("decode_stage", wire,
                                  list(fwds) if fwds else None)
         res = []
@@ -608,6 +616,12 @@ class RemoteStageEngine:
                 h = StagedRef(fwds[i][1])
             res.append(DecodeOut(h=h, logits=logits))
         return res
+
+    def rollback(self, slot: int, tokens: int) -> None:
+        """Synchronous KV rollback after a rejected speculative verify —
+        returns once the worker's pool has truncated (and, for int8,
+        restored) the slot, so the relaunch cannot race the rollback."""
+        self.channel.call("rollback", slot, tokens)
 
     # -- KV handoff (disaggregated prefill -> decode) --------------------
     def export_kv(self, slot: int, tokens: int, layers: List[int],

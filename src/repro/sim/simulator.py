@@ -19,6 +19,12 @@ produced tokens travel to the coordinator — so the simulator and the real
 runtime model the same overlap and stay comparable.  ``max_inflight=1``
 (default) reproduces the classic one-outstanding-pass walk exactly.
 
+Speculative decoding mirrors the runtime's draft-model path: with
+``spec_tokens`` > 0 each decode pass verifies a window of draft tokens and
+confirms the expected accepted prefix (``spec_acceptance`` per-token), so
+tokens-per-round-trip scales with draft quality while every stage still
+computes — and every link still carries — the full window.
+
 Fault-tolerance hooks: ``fail_node(t, name)`` kills a node mid-run (in-flight
 requests restart on a replanned placement), ``slow_node(t, name, factor)``
 injects a straggler; both exercise the planner's elastic replanning.
@@ -56,6 +62,21 @@ class Metrics:
     link_bytes: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     restarts: int = 0
     dropped_requests: int = 0
+    # speculative decoding (mirrors ClusterRuntime's counters): drafts
+    # proposed / accepted / rejected and verify round-trips completed
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_rejected: int = 0
+    spec_rounds: int = 0
+    spec_confirmed: int = 0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return self.spec_accepted / max(1, self.spec_proposed)
+
+    @property
+    def spec_tokens_per_round_trip(self) -> float:
+        return self.spec_confirmed / max(1, self.spec_rounds)
 
     @property
     def measure_window_s(self) -> float:
@@ -173,6 +194,8 @@ class _Pass:
     stage_idx: int = 0
     is_prompt: bool = False
     epoch: int = 0
+    drafts: int = 0                  # speculative: draft tokens verified
+                                     # alongside the confirmed input token
 
 
 class Simulator:
@@ -185,10 +208,24 @@ class Simulator:
                  max_decode_tokens: Optional[int] = None,
                  max_inflight: int = 1,
                  direct_links: bool = True,
-                 prefill_scheduler: Optional[BaseScheduler] = None):
+                 prefill_scheduler: Optional[BaseScheduler] = None,
+                 spec_tokens: int = 0,
+                 spec_acceptance: float = 1.0):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if spec_tokens < 0:
+            raise ValueError(f"spec_tokens must be >= 0, got {spec_tokens}")
+        if not 0.0 <= spec_acceptance <= 1.0:
+            raise ValueError(f"spec_acceptance must be in [0, 1], "
+                             f"got {spec_acceptance}")
         self.max_inflight = max_inflight
+        # speculative decoding: each decode pass verifies ``spec_tokens``
+        # draft tokens alongside the confirmed input token, confirming the
+        # expected accepted prefix 1 + sum(acceptance^i) per round-trip.
+        # The pass still computes (and ships activations for) the FULL
+        # 1 + spec_tokens window — rejected work is the cost of drafting
+        self.spec_tokens = spec_tokens
+        self.spec_acceptance = spec_acceptance
         # direct_links mirrors the runtime transports: True charges
         # stage->stage traffic on the (src, dst) link; False models the
         # coordinator-star dataflow (src->coordinator then coordinator->dst)
@@ -401,6 +438,26 @@ class Simulator:
             limit = min(limit, self.max_decode_tokens)
         return limit
 
+    def _spec_chunk(self, remaining: int) -> Tuple[int, int]:
+        """(expected confirmed tokens, draft count) for one verify pass with
+        ``remaining`` output tokens still uncovered.  The accepted-prefix
+        length under i.i.d. per-token acceptance ``a`` has expectation
+        sum(a^i, i=1..gamma); plus one token the verify pass always
+        confirms (the corrected/bonus token)."""
+        gamma = max(0, min(self.spec_tokens, remaining - 1))
+        expected, run = 1.0, 1.0
+        for _ in range(gamma):
+            run *= self.spec_acceptance
+            expected += run
+        return max(1, min(remaining, int(round(expected)))), gamma
+
+    def _pass_tokens(self, p: _Pass) -> int:
+        """Tokens this pass actually computes at each stage: a verify pass
+        runs the full 1 + drafts window regardless of how many confirm."""
+        if p.is_prompt:
+            return p.state.trace.input_tokens
+        return 1 + p.drafts if p.drafts else p.chunk
+
     def _pipe(self, p: _Pass) -> RequestPipeline:
         """The pipeline this pass walks: prompt passes walk the prefill
         replica's when disaggregated, everything else walks the decode
@@ -428,7 +485,7 @@ class Simulator:
             state.kv_need = kv_need
             kv_grow = 0.0
         else:
-            tokens = p.chunk
+            tokens = self._pass_tokens(p)
             kv_need = 0.0
             # decode grows KV only by the tokens that exceed the prompt-time
             # reservation (charging the full chunk when the estimate is first
@@ -452,17 +509,18 @@ class Simulator:
             self._fire_handoffs(state, st)
         if not last:
             nxt = pipe.stages[p.stage_idx + 1].node
-            nbytes = (state.trace.input_tokens if p.is_prompt else p.chunk) \
-                * self.model.activation_bytes
+            nbytes = self._pass_tokens(p) * self.model.activation_bytes
             p.stage_idx += 1
             self._route_transfer(st.node, nxt, nbytes,
                                  lambda: self._stage_work(p))
             return
         # pass complete -> token(s) to coordinator; with window room the
         # next chunk leaves for stage 0 from HERE, overlapping the return
-        # hop — the ClusterRuntime's speculative launch, modelled
+        # hop — the ClusterRuntime's optimistic launch, modelled.  A verify
+        # pass returns one greedy token per window position
         state.in_pipeline = False
-        nbytes = self.model.token_bytes * (1 if p.is_prompt else p.chunk)
+        nbytes = self.model.token_bytes * (1 if p.is_prompt
+                                           else self._pass_tokens(p))
         self._transfer(st.node, COORDINATOR, nbytes,
                        lambda: self._pass_done(p))
         self._launch_from(st.node, state)
@@ -481,14 +539,19 @@ class Simulator:
         if state.in_pipeline or state.inflight >= self.max_inflight \
                 or state.launched >= limit:
             return
-        chunk = min(self.decode_chunk, limit - state.launched)
+        if self.spec_tokens > 0:
+            chunk, drafts = self._spec_chunk(limit - state.launched)
+        else:
+            chunk, drafts = min(self.decode_chunk,
+                                limit - state.launched), 0
         p = _Pass(state, chunk=chunk, start=state.launched,
-                  epoch=state.epoch)
+                  epoch=state.epoch, drafts=drafts)
         state.launched += chunk
         state.inflight += 1
         state.in_pipeline = True
+        # a verify pass ships the confirmed token + every draft downstream
         self._route_transfer(src, state.pipeline.stages[0].node,
-                             self.model.token_bytes * chunk,
+                             self.model.token_bytes * self._pass_tokens(p),
                              lambda pp=p: self._stage_work(pp))
 
     def _fire_handoffs(self, state: _ReqState, st) -> None:
@@ -550,6 +613,13 @@ class Simulator:
             state.decoded += p.chunk
             if self._now >= self.warmup_s:
                 self.metrics.decoded_tokens += p.chunk
+                if p.drafts:
+                    accepted = p.chunk - 1
+                    self.metrics.spec_rounds += 1
+                    self.metrics.spec_proposed += p.drafts
+                    self.metrics.spec_accepted += accepted
+                    self.metrics.spec_rejected += p.drafts - accepted
+                    self.metrics.spec_confirmed += p.chunk
         if state.decoded >= self._limit(state):
             self._complete(state)
             return

@@ -31,6 +31,21 @@ def f32(cfg):
                                compute_dtype="float32")
 
 
+def draft_model(cfg, params=None, *, seed: int = 0):
+    """A ``(draft_cfg, draft_params)`` pair for the speculation axis.
+    ``seed=0`` re-inits the target's own architecture at the standard key —
+    in these tests that reproduces the target's params exactly, giving a
+    near-perfect-acceptance draft; any other seed gives a low-quality
+    draft.  Either way greedy output must be byte-identical to the
+    non-speculative reference — draft quality only changes speed."""
+    if params is None:
+        import jax
+
+        from repro.models import init
+        params = init(cfg, jax.random.key(seed))
+    return cfg, params
+
+
 # ---------------------------------------------------------------------------
 # cluster / model / plan builders
 # ---------------------------------------------------------------------------
@@ -150,22 +165,37 @@ def serve_on_cluster(cfg, params, p, prompts, *, paged: bool,
 
 def assert_pools_drained(rt: ClusterRuntime) -> None:
     """Every paged stage node must return to zero allocated pages — an
-    in-flight token cancelled by eos/preemption/failover may never leak."""
+    in-flight token cancelled by eos/preemption/failover may never leak.
+    When a draft model is attached its slots must all be free too: a
+    speculative rollback or early eos may never strand a draft slot."""
     for node, used in rt.pool_pages_used().items():
         assert used == 0, f"{node} leaked {used} pages"
+    if getattr(rt, "draft", None) is not None:
+        free = rt.draft.free_slots
+        assert free == rt.ec.max_batch, (
+            f"draft engine leaked {rt.ec.max_batch - free} slots")
 
 
 def assert_serves_like_reference(cfg, params, p, prompts, ref, *,
                                  paged: bool, max_inflight: int = 1,
                                  max_new_tokens=6, ec: EngineConfig = EC,
+                                 spec: Optional[Tuple] = None,
                                  **kw) -> ClusterRuntime:
     """The differential anchor: byte-identical greedy output at any
-    in-flight depth, pools drained on every node."""
+    in-flight depth, pools drained on every node.  ``spec`` turns on
+    speculative decoding: ``(draft_cfg, draft_params)`` or
+    ``(draft_cfg, draft_params, spec_tokens)`` — greedy output must still
+    match the non-speculative reference byte-for-byte."""
+    if spec is not None:
+        kw["draft_cfg"], kw["draft_params"] = spec[0], spec[1]
+        if len(spec) > 2:
+            kw["spec_tokens"] = spec[2]
     rt, reqs = serve_on_cluster(cfg, params, p, prompts, paged=paged,
                                 max_inflight=max_inflight,
                                 max_new_tokens=max_new_tokens, ec=ec, **kw)
     got = [r.output for r in reqs]
-    assert got == ref, (f"depth={max_inflight} paged={paged} diverged:\n"
+    assert got == ref, (f"depth={max_inflight} paged={paged} "
+                        f"spec={spec is not None} diverged:\n"
                         f"  got {got}\n  ref {ref}")
     assert_pools_drained(rt)
     return rt

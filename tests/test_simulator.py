@@ -220,6 +220,42 @@ def test_pipelined_decode_overlaps_return_hop():
                   max_inflight=0)
 
 
+def test_speculative_decode_scales_with_acceptance():
+    """Speculation mirrors the runtime: a high-acceptance draft multiplies
+    tokens-per-round-trip (and therefore cuts per-token latency on a
+    latency-dominated pipeline), a zero-acceptance draft degrades to the
+    classic one token per round-trip — while verify work still covers the
+    full window and token accounting stays exact."""
+    cluster = make_cluster(("A100", "A100", "A100"), latency_s=50e-3)
+    model = small_model(8)
+    p = plan(cluster, model, MILPOptions(time_limit_s=10.0, lns_rounds=0))
+    trace = [TraceRequest(i, 0.0, 64, 32) for i in range(30)]
+    runs = {}
+    for name, kw in (("base", {}),
+                     ("hi", dict(spec_tokens=4, spec_acceptance=0.9)),
+                     ("lo", dict(spec_tokens=4, spec_acceptance=0.0))):
+        sim = Simulator(cluster, model, p.placement, p.make_scheduler(),
+                        warmup_s=0.0, horizon_s=600.0, decode_chunk=1, **kw)
+        m = sim.run(list(trace))
+        assert m.completed_requests == len(trace)
+        assert m.decoded_tokens == runs.get("base", m).decoded_tokens
+        for nodename, ns in sim.nodes.items():
+            assert abs(ns.kv_used) < 1e-6, (nodename, ns.kv_used)
+        runs[name] = m
+    assert runs["hi"].spec_tokens_per_round_trip > 2.5
+    assert runs["hi"].spec_acceptance_rate > 0.6
+    assert runs["lo"].spec_tokens_per_round_trip == 1.0
+    assert runs["lo"].spec_accepted == 0
+    assert runs["hi"].decode_latency["mean"] \
+        < 0.6 * runs["base"].decode_latency["mean"]
+    # rejected verify work isn't free: zero acceptance must not be faster
+    assert runs["lo"].decode_latency["mean"] \
+        >= 0.95 * runs["base"].decode_latency["mean"]
+    with pytest.raises(ValueError, match="spec_acceptance"):
+        Simulator(cluster, model, p.placement, p.make_scheduler(),
+                  spec_tokens=4, spec_acceptance=1.5)
+
+
 def test_straggler_degrades_gracefully():
     cluster = make_cluster(("A100", "A100"))
     model = small_model(4)

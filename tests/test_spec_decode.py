@@ -1,0 +1,255 @@
+"""Speculative decoding tests: a coordinator-side draft model proposing
+gamma tokens per verify pass must leave greedy output BYTE-IDENTICAL to
+non-speculative decoding for ANY draft quality — acceptance rate only
+changes how many round-trips the output takes.  Covers the rollback paths
+(param-dtype truncation, int8 page-snapshot restore), in-flight window
+interaction, disaggregated placements, duplicate delivery, and the page
+pool's truncate primitive the rollback is built on."""
+import numpy as np
+import pytest
+
+from repro.core import LayerRange
+from repro.serving import (ClusterRuntime, EngineConfig, InProcessTransport,
+                           PagedStageEngine, Request)
+from repro.serving.kv_pool import PagePool
+from repro.serving.stage_engine import DecodeItem
+
+from harness import (EC, assert_pools_drained, assert_serves_like_reference,
+                     draft_model, make_disagg_plan, make_plan,
+                     random_assignment, random_prompts, reference_outputs,
+                     serve_on_cluster)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="session")
+def bad_draft(gqa_model):
+    """A draft with ~0% acceptance: same architecture, different init —
+    the worst case for the rollback path, still byte-identical output."""
+    cfg, _ = gqa_model
+    return draft_model(cfg, seed=7)
+
+
+# --- the correctness anchor: spec output == non-spec output -----------------
+
+@pytest.mark.parametrize("max_inflight", [1, 2], ids=["depth1", "depth2"])
+@pytest.mark.parametrize("quality", ["perfect", "bad"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_matches_reference(gqa_model, reference, bad_draft, paged,
+                                quality, max_inflight):
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    spec = (cfg, params, 4) if quality == "perfect" else (*bad_draft, 4)
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=paged, max_inflight=max_inflight,
+                                      spec=spec)
+    assert rt.spec_rounds > 0 and rt.spec_proposed > 0
+    if quality == "perfect":
+        # identical params -> every draft accepted -> multi-token rounds
+        assert rt.spec_rejected == 0
+        assert rt.spec_tokens_per_round_trip > 1.5
+    else:
+        # every draft rejected -> degrades to one token per round-trip,
+        # through the rollback path every single round
+        assert rt.spec_accepted == 0
+        assert rt.spec_rejected == rt.spec_proposed
+
+
+def test_spec_three_stage_with_delay(gqa_model, reference, bad_draft):
+    """3 uneven stages + modelled link delay + in-flight window: delivery
+    timing must not let a stale (pre-rollback) pass confirm tokens."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    rt = assert_serves_like_reference(
+        cfg, params, p, prompts, ref, paged=True, max_inflight=2,
+        transport=InProcessTransport(default_delay_s=2e-3),
+        spec=(*bad_draft, 3))
+    assert rt.spec_rejected > 0
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_disaggregated(gqa_model, reference, paged):
+    """Prefill replica + decode replica: speculation runs on the decode
+    pipeline; the KV handoff and the verify window must compose."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 4)}, {"n1": (0, 2), "n2": (2, 4)})
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref,
+                                      paged=paged, spec=(cfg, params, 4))
+    assert rt.spec_rounds > 0
+
+
+def test_spec_int8_rollback_byte_identical(gqa_model, reference):
+    """The hard case: int8 pages requantize the whole touched page per
+    append, so a rejected sub-step would perturb KEPT rows' bytes unless
+    rollback restores the pre-speculation page content.  The target is
+    int8 while the draft runs float32, so their logits diverge and real
+    rollbacks happen — output must still match a non-speculative int8 run
+    byte-for-byte."""
+    cfg, params = gqa_model
+    prompts, _ = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt0, reqs0 = serve_on_cluster(cfg, params, p, prompts, paged=True,
+                                  kv_dtype="int8")
+    ref8 = [r.output for r in reqs0]
+    rt = assert_serves_like_reference(cfg, params, p, prompts, ref8,
+                                      paged=True, kv_dtype="int8",
+                                      spec=(cfg, params, 4))
+    assert rt.spec_rejected > 0, \
+        "int8 target vs f32 draft should reject at least once"
+
+
+def test_spec_early_eos_mid_window(gqa_model):
+    """max_new_tokens hit INSIDE the accepted prefix: the request completes
+    from the partial window without a rollback, releasing slots (draft
+    included) and pages everywhere."""
+    cfg, params = gqa_model
+    prompts = random_prompts(cfg, (10, 5, 16, 12), seed=0)
+    lens = [1, 2, 3, 6]
+    ref = reference_outputs(cfg, params, prompts, max_new_tokens=lens)
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    assert_serves_like_reference(cfg, params, p, prompts, ref, paged=True,
+                                 max_new_tokens=lens, spec=(cfg, params, 4))
+
+
+# --- rollback races: duplicates and stale in-flight work --------------------
+
+class DuplicatingTransport(InProcessTransport):
+    """Delivers every payload twice — work messages and verify results.
+    The runtime's epoch-aware dedup keys must drop the copies; before the
+    keys carried the epoch, a duplicate verify result raced the rollback
+    and confirmed tokens from a cancelled window."""
+
+    def send(self, src, dst, payload, nbytes, deliver):
+        super().send(src, dst, payload, nbytes, deliver)
+        super().send(src, dst, payload, nbytes, deliver)
+
+
+def test_spec_duplicate_delivery_rollback_race(gqa_model, reference,
+                                               bad_draft):
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = assert_serves_like_reference(
+        cfg, params, p, prompts, ref, paged=True, max_inflight=2,
+        transport=DuplicatingTransport(default_delay_s=1e-3),
+        spec=(*bad_draft, 3))
+    assert rt.spec_rejected > 0
+
+
+# --- engine-level: int8 page snapshot restore -------------------------------
+
+def test_int8_engine_rollback_restores_page_bytes(gqa_model):
+    """Drive one PagedStageEngine directly: a rejected multi-token verify
+    followed by rollback must leave the pool's int8 pages (content AND
+    scales) byte-identical to an engine that only ever decoded the kept
+    prefix — truncation alone fails this because rejected appends inflate
+    the frontier page's absmax scale."""
+    cfg, params = gqa_model
+    ec = EngineConfig(max_batch=2, max_len=32, prompt_len=16)
+    layers = LayerRange(0, cfg.num_layers)
+    prompt = random_prompts(cfg, [6], seed=3)[0]
+    a, b, x, y = 7, 11, 13, 17   # a,b kept; x,y rejected drafts
+
+    def fresh(reserve):
+        eng = PagedStageEngine(cfg, params, layers, ec, page_size=4,
+                               kv_dtype="int8", rng_seed=0)
+        slot = eng.alloc_slot(0)
+        assert eng.ensure(slot, reserve)
+        eng.prefill_chunk(slot, prompt, 0, 0)   # all-paged slice
+        return eng, slot
+
+    def slot_pages(eng, slot):
+        pool = eng.pool
+        nb = int(pool._nblocks[slot])
+        pids = [int(pid) for pid in
+                np.asarray(pool.table[:, slot, :nb]).reshape(-1)]
+        return {pid: tuple(np.asarray(arr[pid]) for arr in
+                           (pool.k, pool.v, pool.k_scales, pool.v_scales))
+                for pid in pids}
+
+    # reference history: decode exactly the kept tokens, one at a time,
+    # reserving only what the kept prefix needs (rollback returns the
+    # rejected window's pages, so allocations must match too)
+    P = len(prompt)
+    ref_eng, slot = fresh(P + 2)
+    for s, tok in enumerate((a, b)):
+        ref_eng.decode_stage([DecodeItem(slot=slot, pos=P + s, entry=0,
+                                         token=tok)])
+    want = slot_pages(ref_eng, slot)
+
+    # speculative history: verify [a, b, x, y] in one call, reject x, y
+    eng, slot2 = fresh(P + 4)
+    assert slot2 == slot
+    eng.decode_stage([DecodeItem(slot=slot2, pos=P, entry=0,
+                                 tokens=[a, b, x, y])])
+    eng.rollback(slot2, P + 2)
+    got = slot_pages(eng, slot2)
+
+    assert sorted(got) == sorted(want)
+    for pid in want:
+        for w, g in zip(want[pid], got[pid]):
+            np.testing.assert_array_equal(w, g)
+
+
+# --- pool primitive ---------------------------------------------------------
+
+def test_pool_truncate_returns_pages(gqa_model):
+    cfg, _ = gqa_model
+    pool = PagePool(cfg, num_pages=64, page_size=4, max_batch=4,
+                    max_seq_len=32, paged_layers=2)
+    assert pool.ensure(0, 20)            # 5 blocks x 2 layers
+    full = pool.used
+    kept = {(li, bi): int(pool.table[li, 0, bi])
+            for li in range(2) for bi in range(3)}
+    pool.truncate(0, 9)                  # ceil(9/4) = 3 blocks
+    assert pool.used == full - 2 * 2
+    for (li, bi), pid in kept.items():   # kept blocks untouched
+        assert int(pool.table[li, 0, bi]) == pid
+    assert pool.ensure(0, 20)            # freed pages are reusable
+    assert pool.used == full
+    pool.truncate(0, 20)                 # no-op: target >= current
+    assert pool.used == full
+    pool.release(0)
+    assert pool.used == 0
+
+
+# --- property: spec == non-spec for random configurations -------------------
+
+def _assert_spec_equals_nonspec(gqa_model, bad_draft, seed: int) -> None:
+    cfg, params = gqa_model
+    rng = np.random.RandomState(seed)
+    p = make_plan(cfg, random_assignment(rng, cfg.num_layers,
+                                         int(rng.randint(1, 4))))
+    paged = bool(rng.randint(2))
+    kv_dtype = "int8" if paged and rng.randint(2) else None
+    depth = int(rng.randint(1, 3))
+    draft = (cfg, params) if rng.randint(2) else bad_draft
+    gamma = int(rng.randint(1, 6))
+    new_tokens = int(rng.randint(1, 8))
+    prompts = random_prompts(cfg, rng.randint(2, 16, size=3), seed=seed)
+    _, reqs = serve_on_cluster(cfg, params, p, prompts, paged=paged,
+                               kv_dtype=kv_dtype,
+                               max_new_tokens=new_tokens)
+    ref = [r.output for r in reqs]
+    assert_serves_like_reference(cfg, params, p, prompts, ref, paged=paged,
+                                 kv_dtype=kv_dtype, max_inflight=depth,
+                                 max_new_tokens=new_tokens,
+                                 spec=(*draft, gamma))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_spec_property(gqa_model, bad_draft, seed):
+        _assert_spec_equals_nonspec(gqa_model, bad_draft, seed)
+else:
+    @pytest.mark.parametrize("seed", [11, 29])
+    def test_spec_property_seeded(gqa_model, bad_draft, seed):
+        _assert_spec_equals_nonspec(gqa_model, bad_draft, seed)
