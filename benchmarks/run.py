@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig12b   warm-start ablation
   fault_*  beyond-paper fault tolerance (failover, straggler)
   pipelined_decode  in-flight decode window depth 1 vs 2 (latency)
+  online_latency    front-door latency under open-loop load (TTFT/TPOT/SLO)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
 """
@@ -32,6 +33,7 @@ def _register():
                                  bench_distributed_cluster,
                                  bench_high_heterogeneity,
                                  bench_kv_quant,
+                                 bench_online_latency,
                                  bench_pipelined_decode,
                                  bench_single_cluster,
                                  bench_spec_decode)
@@ -43,6 +45,7 @@ def _register():
         "kv_quant": bench_kv_quant,
         "direct_links": bench_direct_links,
         "spec_decode": bench_spec_decode,
+        "online_latency": bench_online_latency,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

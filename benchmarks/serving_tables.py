@@ -331,3 +331,102 @@ def bench_spec_decode(quick: bool = False):
         f"max_inflight-only {base_lat:.4f}s"
     return {"tokens_per_round_trip": tpr, "base_lat_s": base_lat,
             "spec_lat_s": spec_lat}
+
+
+def bench_online_latency(quick: bool = False):
+    """Latency under load through the online front door: wall-clock Poisson
+    arrivals (the simulator's own arrival process) hitting the
+    OpenAI-compatible HTTP API over a REAL 2-stage ClusterRuntime
+    (in-process transport forced onto the wall clock), streaming SSE.
+
+    Reported from the server-side stats (runtime monotonic clock):
+    TTFT/TPOT/E2E p50/p95/p99 and SLO attainment — the latency-under-load
+    axis the offline benches cannot measure.  Pinned: every request
+    completes, every latency is non-negative (the clock-unification fix),
+    and TTFT percentiles are finite."""
+    import dataclasses
+    import json
+    import math
+    import threading
+    import time
+    import urllib.request
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core import (LayerRange, ModelProfile, Placement,
+                            full_mesh_cluster, plan)
+    from repro.models import init
+    from repro.serving import ClusterRuntime, EngineConfig, Frontend
+    from repro.sim.traces import arrival_times
+
+    cfg = dataclasses.replace(get_smoke_config("smollm_360m"),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    profile = ModelProfile.from_dims(
+        cfg.name, cfg.num_layers, cfg.d_model, max(cfg.d_ff, 1),
+        cfg.vocab_size, cfg.num_kv_heads, cfg.resolved_head_dim)
+    placement = Placement({"n0": LayerRange(0, 2), "n1": LayerRange(2, 4)},
+                          cfg.num_layers)
+    cluster = full_mesh_cluster(2, latency_s=1e-3)
+    p = plan(cluster, profile, placement=placement)
+    params = init(cfg, jax.random.key(0))
+    ec = EngineConfig(max_batch=4, max_len=48, prompt_len=16)
+    rt = ClusterRuntime(cfg, params, p, ec, paged=True, max_inflight=2,
+                        realtime=True)
+    fe = Frontend(rt, max_pending=32, slo_ttft_s=5.0, slo_tpot_s=2.0)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}/v1/completions"
+
+    n, rate = (6, 4.0) if quick else (12, 6.0)
+    new_tokens = 4 if quick else 6
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(10,)).tolist()
+               for _ in range(n)]
+    errors = []
+
+    def fire(i):
+        body = json.dumps({"prompt": prompts[i], "max_tokens": new_tokens,
+                           "stream": True}).encode()
+        req = urllib.request.Request(
+            url, data=body, headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=120) as resp:
+                for _ in resp:
+                    pass                 # stream to completion
+        except Exception as e:           # collected, asserted below
+            errors.append((i, repr(e)))
+
+    t0 = time.time()
+    sched = arrival_times(n, rate, seed=0)
+    start = time.monotonic()
+    threads = []
+    for i in range(n):
+        gap = start + sched[i] - time.monotonic()
+        if gap > 0:
+            time.sleep(gap)
+        th = threading.Thread(target=fire, args=(i,), daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=180)
+    fe.shutdown(drain=True)
+    rt.shutdown()
+    wall = time.time() - t0
+
+    assert not errors, f"front-door requests failed: {errors}"
+    s = fe.summary()
+    assert s["requests"] == n, s
+    for key in ("ttft_s", "tpot_s", "e2e_s"):
+        for q, v in s[key].items():
+            assert not (v < 0), f"negative {key} {q}: {v}"
+    assert all(math.isfinite(v) for v in s["ttft_s"].values()), s
+    emit("online_latency_requests", wall, f"{s['requests']}")
+    emit("online_latency_offered_rate_per_s", 0.0, f"{rate:.1f}")
+    for key in ("ttft_s", "tpot_s", "e2e_s"):
+        for q in ("p50", "p95", "p99"):
+            emit(f"online_latency_{key}_{q}", 0.0, f"{s[key][q]:.4f}")
+    emit("online_latency_slo_attainment", 0.0,
+         f"{s['slo_attainment']:.2f}")
+    return s

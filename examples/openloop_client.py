@@ -1,0 +1,216 @@
+"""Open-loop client for the online front door (launch/serve.py --serve).
+
+Fires requests at the server on a wall-clock arrival process — Poisson at
+``--rate`` (the same generator the simulator's traces use, so simulated
+and served arrival patterns agree) or replaying a synthetic
+Azure-Conversation-style trace (``--trace``) — WITHOUT waiting for earlier
+requests to finish: arrival times are fixed up front, which is what makes
+the measurement open-loop (a slow server cannot throttle its own load).
+
+Each request streams (SSE) and records client-side TTFT (first token
+chunk), mean TPOT, and E2E latency; the run reports p50/p95/p99 of each
+plus SLO attainment against ``--slo-ttft-ms`` / ``--slo-tpot-ms``, and
+exits non-zero on any transport error, non-200 response, or (with
+``--check-ordered``) out-of-order SSE chunks.
+
+Stdlib-only on purpose (urllib + threads): it must run anywhere the repo
+runs, including the CI smoke job.
+
+  PYTHONPATH=src python examples/openloop_client.py \
+      --url http://127.0.0.1:8000 --rate 4 --requests 16 --stream \
+      --slo-ttft-ms 2000 --slo-tpot-ms 1000 --check-ordered
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+sys.path.insert(0, "src")
+
+from repro.sim.traces import arrival_times, make_trace  # noqa: E402
+
+
+def percentile(xs, q):
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    i = (len(ys) - 1) * q / 100.0
+    lo, hi = int(i), min(int(i) + 1, len(ys) - 1)
+    return ys[lo] + (ys[hi] - ys[lo]) * (i - lo)
+
+
+def wait_ready(url: str, timeout_s: float) -> None:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        try:
+            with urllib.request.urlopen(url + "/healthz", timeout=5) as r:
+                if r.status == 200:
+                    return
+        except (urllib.error.URLError, OSError):
+            pass
+        time.sleep(0.25)
+    raise SystemExit(f"server at {url} not ready within {timeout_s:.0f}s")
+
+
+def run_one(url: str, i: int, prompt, max_tokens: int, stream: bool,
+            temperature: float, timeout_s: float, check_ordered: bool,
+            out: dict) -> None:
+    body = json.dumps({"prompt": prompt, "max_tokens": max_tokens,
+                       "stream": stream,
+                       "temperature": temperature}).encode("utf-8")
+    req = urllib.request.Request(
+        url + "/v1/completions", data=body,
+        headers={"Content-Type": "application/json"})
+    t0 = time.monotonic()
+    rec = {"id": i, "error": None, "tokens": 0, "ttft_s": None,
+           "tpot_s": None, "e2e_s": None, "finish": None}
+    out[i] = rec
+    try:
+        with urllib.request.urlopen(req, timeout=timeout_s) as resp:
+            if not stream:
+                obj = json.load(resp)
+                rec["tokens"] = len(obj["choices"][0].get("token_ids", []))
+                rec["finish"] = obj["choices"][0]["finish_reason"]
+                rec["e2e_s"] = time.monotonic() - t0
+                return
+            t_first = t_last = None
+            n = 0
+            for raw in resp:
+                line = raw.strip()
+                if not line.startswith(b"data: "):
+                    continue
+                data = line[len(b"data: "):]
+                if data == b"[DONE]":
+                    break
+                choice = json.loads(data)["choices"][0]
+                if choice.get("token_id") is not None:
+                    t_last = time.monotonic()
+                    if t_first is None:
+                        t_first = t_last
+                    if check_ordered and choice.get("output_index") != n:
+                        rec["error"] = (f"out-of-order chunk: expected "
+                                        f"output_index {n}, got "
+                                        f"{choice.get('output_index')}")
+                        return
+                    n += 1
+                if choice.get("finish_reason"):
+                    rec["finish"] = choice["finish_reason"]
+            t_end = time.monotonic()
+            rec["tokens"] = n
+            rec["e2e_s"] = t_end - t0
+            if t_first is not None:
+                rec["ttft_s"] = t_first - t0
+                if n > 1:
+                    rec["tpot_s"] = (t_last - t_first) / (n - 1)
+            if rec["finish"] is None:
+                rec["error"] = "stream ended without finish_reason"
+    except urllib.error.HTTPError as e:
+        rec["error"] = f"HTTP {e.code}: {e.read()[:200].decode(errors='replace')}"
+    except (urllib.error.URLError, OSError) as e:
+        rec["error"] = f"transport: {e}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default="http://127.0.0.1:8000")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--trace", action="store_true",
+                    help="arrivals (and output lengths) from the synthetic "
+                         "Azure-Conversation trace instead of plain Poisson")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=256,
+                    help="prompt token ids drawn uniformly from [0, vocab)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true", default=True)
+    ap.add_argument("--no-stream", dest="stream", action="store_false")
+    ap.add_argument("--timeout-s", type=float, default=120.0,
+                    help="per-request HTTP timeout")
+    ap.add_argument("--wait-ready-s", type=float, default=0.0,
+                    help="poll /healthz up to this long before starting")
+    ap.add_argument("--check-ordered", action="store_true",
+                    help="fail on out-of-order SSE output_index")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0)
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0)
+    args = ap.parse_args()
+
+    if args.wait_ready_s > 0:
+        wait_ready(args.url, args.wait_ready_s)
+
+    rng = random.Random(args.seed)
+    n = args.requests
+    if args.trace:
+        tr = make_trace(n, args.rate, seed=args.seed)
+        arrivals = [t.arrival_s for t in tr]
+        lengths = [min(t.output_tokens, args.max_tokens) for t in tr]
+    else:
+        arrivals = arrival_times(n, args.rate, seed=args.seed)
+        lengths = [args.max_tokens] * n
+    prompts = [[rng.randrange(args.vocab) for _ in range(args.prompt_len)]
+               for _ in range(n)]
+
+    out: dict = {}
+    threads = []
+    t_start = time.monotonic()
+    for i in range(n):
+        delay = t_start + arrivals[i] - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)          # open loop: fixed arrival schedule
+        th = threading.Thread(target=run_one,
+                              args=(args.url, i, prompts[i], lengths[i],
+                                    args.stream, args.temperature,
+                                    args.timeout_s, args.check_ordered, out),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=args.timeout_s + 30)
+    wall = time.monotonic() - t_start
+
+    recs = [out[i] for i in sorted(out)]
+    errors = [r for r in recs if r["error"]]
+    for r in errors:
+        print(f"req {r['id']}: {r['error']}", file=sys.stderr)
+    done = [r for r in recs if not r["error"]]
+    ttfts = [r["ttft_s"] for r in done if r["ttft_s"] is not None]
+    tpots = [r["tpot_s"] for r in done if r["tpot_s"] is not None]
+    e2es = [r["e2e_s"] for r in done if r["e2e_s"] is not None]
+    ok = 0
+    for r in done:
+        good = True
+        if args.slo_ttft_ms > 0 and r["ttft_s"] is not None:
+            good = good and r["ttft_s"] * 1e3 <= args.slo_ttft_ms
+        if args.slo_tpot_ms > 0 and r["tpot_s"] is not None:
+            good = good and r["tpot_s"] * 1e3 <= args.slo_tpot_ms
+        ok += bool(good)
+    summary = {
+        "requests": n, "completed": len(done), "errors": len(errors),
+        "wall_s": round(wall, 3),
+        "achieved_rate_per_s": round(n / wall, 3) if wall > 0 else None,
+        "tokens": sum(r["tokens"] for r in done),
+        "ttft_s": {f"p{q}": round(percentile(ttfts, q), 4)
+                   for q in (50, 95, 99)},
+        "tpot_s": {f"p{q}": round(percentile(tpots, q), 4)
+                   for q in (50, 95, 99)},
+        "e2e_s": {f"p{q}": round(percentile(e2es, q), 4)
+                  for q in (50, 95, 99)},
+        "slo_attainment": round(ok / len(done), 4) if done else None,
+    }
+    print(json.dumps(summary))
+    if errors or len(done) < n:
+        raise SystemExit(1)
+    if any(t is not None and t < 0 for t in ttfts + tpots):
+        raise SystemExit("negative latency measured")
+
+
+if __name__ == "__main__":
+    main()

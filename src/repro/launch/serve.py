@@ -20,10 +20,18 @@ SocketTransport; add --connect HOST:PORT to use externally started
 ``python -m repro.launch.worker`` processes, e.g. on other hosts):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
       --cluster A100,L4 --stages 2 --transport socket --new-tokens 8
+
+Online front door (OpenAI-compatible HTTP API + SSE streaming over the
+cluster runtime; drive it with examples/openloop_client.py):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --smoke \
+      --cluster A100,L4 --stages 2 --serve 127.0.0.1:8000
 """
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
 
 import jax
@@ -115,7 +123,14 @@ def run_cluster(cfg, args) -> None:
         rt = ClusterRuntime(cfg, params, p, ec,
                             paged=args.paged or not args.dense,
                             page_size=args.page_size, kv_dtype=kv_dtype,
-                            max_inflight=args.max_inflight, **spec_kw)
+                            max_inflight=args.max_inflight,
+                            # the front door needs wall-clock arrivals even
+                            # over the in-process transport
+                            realtime=True if args.serve else None,
+                            **spec_kw)
+    if args.serve:
+        run_frontdoor(cfg, rt, args)
+        return
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
                     max_new_tokens=args.new_tokens)
@@ -136,6 +151,36 @@ def run_cluster(cfg, args) -> None:
         print(f"  {rt._spec_note()}")
     print("sampled ids:", [r.output for r in reqs[:2]])
     rt.shutdown()                      # reap worker processes (socket runs)
+
+
+def run_frontdoor(cfg, rt, args) -> None:
+    """Serve the runtime behind the OpenAI-compatible HTTP front door
+    until SIGINT/SIGTERM, then drain gracefully and print the
+    server-side TTFT/TPOT/SLO summary."""
+    from repro.serving.frontend import Frontend
+
+    host, _, port = args.serve.rpartition(":")
+    fe = Frontend(rt, max_pending=args.max_pending,
+                  slo_ttft_s=args.slo_ttft_ms / 1e3
+                  if args.slo_ttft_ms > 0 else None,
+                  slo_tpot_s=args.slo_tpot_ms / 1e3
+                  if args.slo_tpot_ms > 0 else None)
+    bhost, bport = fe.serve(host or "127.0.0.1", int(port))
+    print(f"serving {cfg.name} on http://{bhost}:{bport} "
+          f"(POST /v1/completions, GET /healthz; SIGINT drains)",
+          flush=True)
+    stop = threading.Event()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, lambda *_: stop.set())
+    while not stop.is_set():
+        stop.wait(0.2)
+    print("draining ...", flush=True)
+    fe.shutdown(drain=True)
+    print("served summary: "
+          + json.dumps(fe.summary(), default=float), flush=True)
+    rt.shutdown()
+    if fe.loop_error is not None:
+        raise SystemExit(f"runtime loop died: {fe.loop_error!r}")
 
 
 def main() -> None:
@@ -182,6 +227,20 @@ def main() -> None:
     ap.add_argument("--spec-tokens", type=int, default=4,
                     help="with --draft: draft tokens proposed per verify "
                          "round-trip (gamma)")
+    ap.add_argument("--serve", default="",
+                    help="with --cluster: HOST:PORT for the OpenAI-"
+                         "compatible HTTP front door (SSE streaming; "
+                         "port 0 picks an ephemeral port, printed on "
+                         "startup) instead of a one-shot batch")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="with --serve: 429 past this many accepted-but-"
+                         "unfinished requests")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="with --serve: TTFT SLO for the served summary "
+                         "(0 = none)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help="with --serve: mean-TPOT SLO for the served "
+                         "summary (0 = none)")
     ap.add_argument("--direct-links", action="store_true",
                     help="with --transport socket: stage workers forward "
                          "activation frames to the next stage's worker over "

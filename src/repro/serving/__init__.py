@@ -1,5 +1,7 @@
 """Serving engines: continuous batching over (partial) layer stacks."""
 from .engine import Engine, EngineConfig, PagedEngine, Request
+from .frontend import (Frontend, RequestStats, decode_tokens, encode_text,
+                       percentiles, summarize)
 from .kv_pool import (PagePool, PoolExhausted, full_rectangle_pages,
                       page_bytes, pages_for_vram)
 from .runtime import ClusterRuntime, InProcessTransport, Transport

@@ -82,7 +82,7 @@ class _EngineBase:
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
         self._validate(req)
-        req.submitted_s = time.time()
+        req.submitted_s = time.monotonic()
         self.queue.append(req)
 
     def _validate(self, req: Request) -> None:
@@ -91,7 +91,7 @@ class _EngineBase:
     def _finish(self, slot: int, req: Request, reason: str) -> None:
         req.done = True
         req.finish_reason = reason
-        req.finished_s = time.time()
+        req.finished_s = time.monotonic()
         self.slots[slot] = None
         self.active[slot] = False
 
@@ -199,7 +199,7 @@ class Engine(_EngineBase):
             nxt = sample_token(np.asarray(logits)[0], req.temperature,
                                self._rng)
             req.output.append(int(nxt))
-            req.first_token_s = time.time()
+            req.first_token_s = time.monotonic()
             reason = self._first_token_done(req, nxt, len(prompt))
             if reason is not None:
                 self._finish(slot, req, reason)
@@ -374,7 +374,7 @@ class PagedEngine(_EngineBase):
             else:
                 nxt = sample_token(logits, req.temperature, self._rng)
                 req.output.append(int(nxt))
-                req.first_token_s = time.time()
+                req.first_token_s = time.monotonic()
                 reason = self._first_token_done(req, nxt, S)
                 if reason is not None:
                     self.pool.release(slot)

@@ -97,6 +97,7 @@ import queue as _queue
 import socket as _socket
 import subprocess
 import sys
+import threading
 import time
 from collections import defaultdict, deque
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
@@ -297,7 +298,8 @@ class ClusterRuntime:
                                                     LayerRange], Any]] = None,
                  stall_timeout_s: float = 60.0,
                  draft_cfg: Optional[ModelConfig] = None, draft_params=None,
-                 spec_tokens: int = 4):
+                 spec_tokens: int = 4,
+                 realtime: Optional[bool] = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cfg = cfg
@@ -323,12 +325,23 @@ class ClusterRuntime:
         # realtime transports (sockets) finish deliveries on their own
         # threads: they get a thread-safe mailbox drained by step(), and the
         # loop runs on the wall clock.  Virtual-clock transports keep the
-        # deterministic event heap.
-        self.realtime = bool(getattr(self.transport, "realtime", False))
+        # deterministic event heap, unless ``realtime=True`` forces the wall
+        # clock (the online front door over an in-process transport), in
+        # which case modelled link delays become real timers feeding the
+        # same mailbox.
+        auto = bool(getattr(self.transport, "realtime", False))
+        self.realtime = auto if realtime is None else bool(realtime)
         self._mailbox: "_queue.Queue" = _queue.Queue()
+        self._ingest: "_queue.Queue" = _queue.Queue()
+        self._listeners: Dict[int, Tuple[Optional[Callable[[int], None]],
+                                         Optional[Callable[[Request], None]]]
+                              ] = {}
+        self._stop_serving = threading.Event()
         self._t0 = time.monotonic()
-        if self.realtime:
+        if auto:
             self.transport.bind(lambda d, fn: self._mailbox.put(fn))
+        elif self.realtime:
+            self.transport.bind(self._deliver_realtime)
         else:
             self.transport.bind(lambda d, fn: self._push(self._now + d, fn))
         self._chunked = paged and all_blocks_paged(cfg)
@@ -502,19 +515,85 @@ class ClusterRuntime:
         return (dst, alloc())
 
     # -- public API ---------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def clock(self) -> float:
+        """Seconds on the runtime's own clock: wall time since construction
+        (monotonic) for realtime runs, the virtual event clock otherwise.
+        EVERY per-request timestamp (``submitted_s`` / ``first_token_s`` /
+        ``finished_s``) is stamped from here — one monotonic base, so TTFT
+        and TPOT can never go negative when the system wall clock
+        (``time.time``) steps under NTP, and they are defined on
+        virtual-clock runs too."""
+        if self.realtime:
+            return time.monotonic() - self._t0
+        return self._now
+
+    def _deliver_realtime(self, d: float, fn: Callable[[], None]) -> None:
+        """Delivery sink for realtime-over-in-process runs: a modelled link
+        delay becomes a real timer into the thread-safe mailbox."""
+        if d > 0:
+            threading.Timer(d, self._mailbox.put, args=(fn,)).start()
+        else:
+            self._mailbox.put(fn)
+
+    def submit(self, req: Request, *,
+               on_token: Optional[Callable[[int], None]] = None,
+               on_done: Optional[Callable[[Request], None]] = None) -> None:
+        """Queue a request.  Thread-safe: the online front door calls this
+        from HTTP handler threads while ``serve_forever`` steps — the job
+        lands in an ingest queue that only the loop thread drains into the
+        admission deque.  Raises ``ValueError`` for requests that could
+        never serve (mapped to HTTP 400 by the front door).
+
+        ``on_token`` fires on the loop thread once per token the
+        coordinator *confirms*, in strict output order — in-flight
+        ``max_inflight`` windows and speculative verify rounds never stream
+        unconfirmed tokens.  ``on_done`` fires once at completion."""
         if len(req.prompt) == 0:
             raise ValueError("empty prompt")
         if len(req.prompt) > self.ec.max_len:
             raise ValueError(f"prompt of {len(req.prompt)} tokens exceeds "
                              f"max_len {self.ec.max_len}; refusing to "
                              "truncate")
-        req.submitted_s = time.time()
-        self.queue.append(_Job(req))
+        if req.temperature > 0 and self.draft is not None:
+            raise ValueError(
+                f"temperature {req.temperature} > 0 is incompatible with "
+                f"speculative decoding (spec_tokens={self.spec_tokens}): "
+                "verification accepts draft tokens by greedy argmax, so "
+                "sampled acceptance would silently change the output "
+                "distribution; serve sampled requests on a runtime "
+                "without a draft model")
+        req.submitted_s = self.clock()
+        if on_token is not None or on_done is not None:
+            self._listeners[req.request_id] = (on_token, on_done)
+        self._ingest.put(_Job(req))
+        self._mailbox.put(lambda: None)   # wake an idle serve loop
+
+    def pending(self) -> int:
+        """Requests accepted but not finished (ingest + admission queue +
+        live jobs) — the front door's 429 admission signal.  Thread-safe:
+        reads container sizes only."""
+        return self._ingest.qsize() + len(self.queue) + len(self.jobs)
+
+    def _drain_ingest(self) -> None:
+        """Move thread-safe submissions into the admission deque (loop
+        thread only — ``fail_node``/``apply_plan`` iterate the deque)."""
+        while True:
+            try:
+                self.queue.append(self._ingest.get_nowait())
+            except _queue.Empty:
+                return
 
     def _idle(self) -> bool:
         return not (self.queue or self.jobs or self._events or self._ready
-                    or self._mailbox.qsize())
+                    or self._mailbox.qsize() or self._ingest.qsize())
+
+    def _inflight_work(self) -> bool:
+        """Work whose progress depends on future deliveries: live jobs,
+        scheduled events, or stage-work awaiting a decode pass.  A
+        non-empty admission queue alone is NOT in-flight — it drains the
+        moment running work frees capacity (and never can if nothing is
+        running)."""
+        return bool(self.jobs or self._events or self._ready)
 
     def run_until_done(self, max_iters: int = 100000) -> None:
         for _ in range(max_iters):
@@ -525,7 +604,7 @@ class ClusterRuntime:
             # realtime (socket) transports complete deliveries on their own
             # threads: no local progress just means the bytes are still in
             # flight — block on the mailbox instead of declaring a stall
-            if self.realtime and self._await_delivery():
+            if self.realtime and self._await_delivery(self.stall_timeout_s):
                 continue
             raise RuntimeError(
                 "runtime stalled: queued requests cannot be admitted "
@@ -535,12 +614,52 @@ class ClusterRuntime:
         raise RuntimeError(
             f"not done after {max_iters} iterations; " + self._state())
 
-    def _await_delivery(self) -> bool:
-        """Block for the next transport delivery (wall clock), bounded by
-        ``stall_timeout_s`` so a deadlocked socket run fails fast with
-        diagnostics instead of hanging CI."""
+    def serve_forever(self) -> None:
+        """Online event loop: step while accepting thread-safe ``submit()``
+        from other threads.  Unlike ``run_until_done`` the workload is
+        OPEN — ``_idle()`` means "waiting for the next request", not
+        "done", so idle waits block on the mailbox indefinitely and the
+        stall timer is armed only while in-flight work exists (an idle
+        server is not stalled).  Returns once ``stop_serving()`` has been
+        called and everything in flight has drained."""
+        while True:
+            if self.step():
+                continue
+            if self._idle() and self._stop_serving.is_set():
+                return
+            if self._inflight_work():
+                # a delivery must land within the stall budget, or the run
+                # is declared wedged with diagnostics
+                if not self._await_delivery(self.stall_timeout_s):
+                    raise RuntimeError(
+                        "runtime stalled with work in flight; "
+                        + self._state())
+            elif self.queue:
+                # admission-blocked with nothing running: capacity can
+                # never free up (the pool floor guarantees one max-budget
+                # request always fits, so this is a genuine wedge)
+                raise RuntimeError(
+                    "queued requests cannot be admitted "
+                    "(cluster slots/pools too small?); " + self._state())
+            else:
+                # idle: block until a submission or stop_serving wakes us
+                self._await_delivery(None)
+
+    def stop_serving(self) -> None:
+        """Ask ``serve_forever`` to exit once in-flight work drains.
+        Callable from any thread; submissions already accepted are still
+        served (the front door stops accepting new ones first)."""
+        self._stop_serving.set()
+        self._mailbox.put(lambda: None)   # wake a blocked idle wait
+
+    def _await_delivery(self, timeout_s: Optional[float] = None) -> bool:
+        """Block for the next transport delivery or ingest wake-up.
+        ``timeout_s=None`` blocks indefinitely — the right mode when
+        nothing is in flight; a bounded wait is armed only over in-flight
+        work, so a deadlocked run still fails fast with diagnostics
+        instead of hanging CI."""
         try:
-            fn = self._mailbox.get(timeout=self.stall_timeout_s)
+            fn = self._mailbox.get(timeout=timeout_s)
         except _queue.Empty:
             return False
         fn()
@@ -557,7 +676,7 @@ class ClusterRuntime:
         describe = getattr(self.transport, "describe", None)
         extra = f" transport={describe()}" if callable(describe) else ""
         spec = self._spec_note()
-        return (f"queued={len(self.queue)} "
+        return (f"queued={len(self.queue) + self._ingest.qsize()} "
                 f"in_flight(confirmed+window)={windows} "
                 f"pending_events={len(self._events)} ready={ready} "
                 f"now={self._now:.6f}" + (f" {spec}" if spec else "") + extra)
@@ -568,6 +687,7 @@ class ClusterRuntime:
         anything progressed."""
         if self.realtime:
             self._now = max(self._now, time.monotonic() - self._t0)
+        self._drain_ingest()
         progressed = self._admit()
         if self._events:
             self._now = max(self._now, self._events[0][0])
@@ -881,6 +1001,23 @@ class ClusterRuntime:
                     eng.release(slot)
 
     # -- token arrivals (coordinator) ----------------------------------------
+    def _confirm(self, job: _Job, tok: int) -> None:
+        """Confirm ONE token at the coordinator: append it to the visible
+        output, stamp the first-token time (on the runtime clock, so it is
+        defined for virtual-clock runs too), and stream it to any listener.
+        Every confirmed token — classic walk, in-flight window drain, or
+        speculative verify acceptance — flows through here, so SSE streams
+        see tokens strictly in confirmation order."""
+        req = job.req
+        req.output.append(int(tok))
+        self.tokens_produced += 1
+        if req.first_token_s is None:
+            req.first_token_s = self.clock()
+        self._vfirst.setdefault(req.request_id, self._now)
+        cb = self._listeners.get(req.request_id)
+        if cb is not None and cb[0] is not None:
+            cb[0](int(tok))
+
     def _stop_reason(self, job: _Job) -> Optional[str]:
         req = job.req
         if int(req.output[-1]) == self.ec.eos_token:
@@ -901,10 +1038,7 @@ class ClusterRuntime:
         job.seen.add(("first",))
         req = job.req
         if not job.resumed:
-            req.output.append(int(tok))
-            req.first_token_s = time.time()
-            self._vfirst[req.request_id] = self._now
-            self.tokens_produced += 1
+            self._confirm(job, int(tok))
             reason = self._stop_reason(job)
             if reason is not None:
                 self._complete(job, reason)
@@ -933,8 +1067,7 @@ class ClusterRuntime:
         req = job.req
         while len(req.output) in job.inbox:
             t = job.inbox.pop(len(req.output))
-            req.output.append(t)
-            self.tokens_produced += 1
+            self._confirm(job, t)
             job.pos += 1
             reason = self._stop_reason(job)
             if reason is not None:
@@ -968,8 +1101,7 @@ class ClusterRuntime:
         # just confirmed — the draft need not re-consume them next round
         job.draft_pos = max(job.draft_pos, base + 1 + min(a, gamma - 1))
         for t in greedy[:a + 1]:
-            req.output.append(int(t))
-            self.tokens_produced += 1
+            self._confirm(job, int(t))
             self.spec_confirmed += 1
             job.pos += 1
             reason = self._stop_reason(job)
@@ -1269,7 +1401,7 @@ class ClusterRuntime:
         req = job.req
         req.done = True
         req.finish_reason = reason
-        req.finished_s = time.time()
+        req.finished_s = self.clock()
         # cancel speculative in-flight passes (a stop confirmed while token
         # t+1 is mid-pipeline): the epoch bump kills their deliveries; KV
         # they reserved is released with the slots below
@@ -1283,6 +1415,9 @@ class ClusterRuntime:
         self._release_all(job)
         self.jobs.pop(req.request_id, None)
         self.completed += 1
+        cb = self._listeners.pop(req.request_id, None)
+        if cb is not None and cb[1] is not None:
+            cb[1](req)
 
     def _preempt(self, job: _Job) -> None:
         """Pool exhausted: evict pipeline-wide, keep generated tokens, requeue

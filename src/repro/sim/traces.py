@@ -38,21 +38,48 @@ def azure_conversation_lengths(rng: random.Random) -> tuple:
     return inp, out
 
 
+def _poisson_gap(rng: random.Random, rate_per_s: float,
+                 burstiness: float) -> float:
+    """One inter-arrival gap of the (optionally bursty) Poisson process.
+    ``burstiness`` in [0,1) mixes in a second, 4x-rate regime to mimic
+    the diurnal bursts of the real trace."""
+    rate = rate_per_s
+    if burstiness and rng.random() < burstiness:
+        rate *= 4.0
+    return rng.expovariate(rate)
+
+
+def arrival_gaps(rate_per_s: float, *, seed: int = 0,
+                 burstiness: float = 0.0) -> Iterator[float]:
+    """Endless inter-arrival gaps for an open-loop arrival process — the
+    SAME process ``make_trace`` uses for the simulator, shared with the
+    wall-clock client (``examples/openloop_client.py``) and the online
+    latency benchmark so simulated and served arrivals agree."""
+    rng = random.Random(seed)
+    while True:
+        yield _poisson_gap(rng, rate_per_s, burstiness)
+
+
+def arrival_times(n: int, rate_per_s: float, *, seed: int = 0,
+                  burstiness: float = 0.0) -> List[float]:
+    """First ``n`` absolute arrival times of the open-loop process."""
+    gaps = arrival_gaps(rate_per_s, seed=seed, burstiness=burstiness)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += next(gaps)
+        out.append(t)
+    return out
+
+
 def make_trace(num_requests: int, arrival_rate_per_s: float,
                seed: int = 0, burstiness: float = 0.0) -> List[TraceRequest]:
-    """Poisson arrivals at ``arrival_rate_per_s`` requests/s.
-
-    ``burstiness`` in [0,1) mixes in a second, 4x-rate regime to mimic the
-    diurnal bursts of the real trace.
-    """
+    """Poisson arrivals at ``arrival_rate_per_s`` requests/s (see
+    ``arrival_gaps`` for the burstiness mix)."""
     rng = random.Random(seed)
     out: List[TraceRequest] = []
     t = 0.0
     for i in range(num_requests):
-        rate = arrival_rate_per_s
-        if burstiness and rng.random() < burstiness:
-            rate *= 4.0
-        t += rng.expovariate(rate)
+        t += _poisson_gap(rng, arrival_rate_per_s, burstiness)
         inp, outp = azure_conversation_lengths(rng)
         out.append(TraceRequest(i, t, inp, outp))
     return out

@@ -1,0 +1,390 @@
+"""Online front door: wall-clock ingest, SSE streaming, HTTP error
+mapping, graceful drain — plus regression tests for the request-clock
+bugs the front door exposed (mixed time.time()/time.monotonic() stamps,
+idle-vs-stalled ambiguity in the serve loop, sampling × speculation).
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+import queue as _queue
+
+import numpy as np
+import pytest
+
+from repro.serving import ClusterRuntime, Frontend, InProcessTransport, Request
+
+from harness import (EC, assert_pools_drained, draft_model, make_plan,
+                     random_prompts)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _post(url, path, body, timeout=60):
+    req = urllib.request.Request(
+        url + path, data=json.dumps(body).encode("utf-8"),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.load(resp)
+
+
+def _stream(url, body, timeout=60):
+    """POST a streaming completion; returns (token_ids, output_indices,
+    finish_reason)."""
+    req = urllib.request.Request(
+        url + "/v1/completions", data=json.dumps(body).encode("utf-8"),
+        headers={"Content-Type": "application/json"})
+    toks, idxs, finish = [], [], None
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        assert resp.headers["Content-Type"].startswith("text/event-stream")
+        for raw in resp:
+            line = raw.strip()
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):]
+            if data == b"[DONE]":
+                break
+            choice = json.loads(data)["choices"][0]
+            if choice.get("token_id") is not None:
+                toks.append(choice["token_id"])
+                idxs.append(choice["output_index"])
+            if choice.get("finish_reason"):
+                finish = choice["finish_reason"]
+    return toks, idxs, finish
+
+
+@pytest.fixture
+def online_frontend(gqa_model):
+    """A served 2-stage front door (wall clock over the in-process
+    transport, pipelined decode window 2) + offline fixtures."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        realtime=True,
+                        transport=InProcessTransport(default_delay_s=2e-3))
+    fe = Frontend(rt, max_pending=8)
+    host, port = fe.serve("127.0.0.1", 0)
+    yield cfg, rt, fe, f"http://{host}:{port}"
+    fe.shutdown(drain=True)
+    rt.shutdown()
+    assert fe.loop_error is None, f"runtime loop died: {fe.loop_error!r}"
+
+
+# ---------------------------------------------------------------------------
+# tentpole: wall-clock streaming ingest
+
+
+def test_streamed_output_matches_offline_reference(online_frontend,
+                                                   reference):
+    """Requests submitted over HTTP while the loop is stepping (staggered,
+    so later ones genuinely arrive mid-run) stream byte-identical greedy
+    output to the single-engine offline reference, with SSE chunks in
+    strict confirmation order across the max_inflight=2 window."""
+    cfg, rt, fe, url = online_frontend
+    prompts, refs = reference
+    results = {}
+
+    def fire(i):
+        results[i] = _stream(url, {"prompt": [int(t) for t in prompts[i]],
+                                   "max_tokens": 6, "stream": True})
+
+    threads = []
+    for i in range(len(prompts)):
+        th = threading.Thread(target=fire, args=(i,), daemon=True)
+        th.start()
+        threads.append(th)
+        time.sleep(0.03)        # arrivals land while earlier requests run
+    for th in threads:
+        th.join(timeout=120)
+    assert sorted(results) == list(range(len(prompts)))
+    for i, (toks, idxs, finish) in sorted(results.items()):
+        assert toks == refs[i], (i, toks, refs[i])
+        assert idxs == list(range(len(refs[i]))), idxs
+        assert finish == "length"
+    # wait for the loop to release slots (on_done fires before _release_all
+    # finishes the last request's accounting is same-call; pending drains)
+    deadline = time.monotonic() + 10
+    while rt.pending() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert_pools_drained(rt)
+    s = fe.summary()
+    assert s["requests"] == len(prompts)
+    for key in ("ttft_s", "tpot_s", "e2e_s"):
+        assert all(not (v < 0) for v in s[key].values()), s
+
+
+def test_non_streaming_and_chat(online_frontend):
+    cfg, rt, fe, url = online_frontend
+    status, obj = _post(url, "/v1/completions",
+                        {"prompt": "hello world", "max_tokens": 4})
+    assert status == 200
+    assert len(obj["choices"][0]["token_ids"]) == 4
+    assert obj["usage"]["completion_tokens"] == 4
+    status, obj = _post(url, "/v1/chat/completions",
+                        {"messages": [{"role": "user", "content": "hi"}],
+                         "max_tokens": 3})
+    assert status == 200
+    assert obj["choices"][0]["message"]["role"] == "assistant"
+    assert obj["object"] == "chat.completion"
+
+
+def test_models_and_healthz(online_frontend):
+    cfg, rt, fe, url = online_frontend
+    with urllib.request.urlopen(url + "/v1/models", timeout=30) as r:
+        obj = json.load(r)
+    assert obj["data"][0]["id"] == cfg.name
+    with urllib.request.urlopen(url + "/healthz", timeout=30) as r:
+        h = json.load(r)
+    assert h["status"] == "ok"
+    assert "queued=" in h["state"]          # _state() diagnostics surface
+
+
+# ---------------------------------------------------------------------------
+# HTTP error mapping
+
+
+def test_http_400_mapping(online_frontend):
+    cfg, rt, fe, url = online_frontend
+    cases = [
+        {"prompt": [0] * (EC.max_len + 10), "max_tokens": 2},  # over budget
+        {"prompt": "", "max_tokens": 2},                  # empty
+        {"prompt": [0, 1, cfg.vocab_size + 7], "max_tokens": 2},  # bad ids
+        {"prompt": {"nested": 1}, "max_tokens": 2},       # wrong type
+        {"messages": [], "max_tokens": 2, "_chat": True},  # empty chat
+    ]
+    for body in cases:
+        path = "/v1/chat/completions" if body.pop("_chat", False) \
+            else "/v1/completions"
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, path, body)
+        assert ei.value.code == 400, body
+        err = json.load(ei.value)["error"]
+        assert err["message"], body
+
+
+def test_http_429_at_capacity(gqa_model):
+    """Past ``max_pending`` accepted-but-unfinished requests the server
+    answers 429 with Retry-After instead of queueing without bound."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True,
+                        transport=InProcessTransport(default_delay_s=20e-3))
+    fe = Frontend(rt, max_pending=1)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}"
+    try:
+        done = {}
+        th = threading.Thread(
+            target=lambda: done.setdefault(
+                "r", _stream(url, {"prompt": [1] * 8, "max_tokens": 24,
+                                   "stream": True}, timeout=120)),
+            daemon=True)
+        th.start()
+        deadline = time.monotonic() + 30
+        while rt.pending() == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)           # wait until the first is in flight
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, "/v1/completions", {"prompt": [2] * 8,
+                                           "max_tokens": 2})
+        assert ei.value.code == 429
+        assert ei.value.headers["Retry-After"]
+        th.join(timeout=120)
+        assert done["r"][2] == "length"   # the in-flight stream finished
+    finally:
+        fe.shutdown(drain=True)
+        rt.shutdown()
+
+
+def test_graceful_drain(gqa_model):
+    """During a drain new requests get 503 while the in-flight stream runs
+    to completion; shutdown then stops the loop cleanly."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True,
+                        transport=InProcessTransport(default_delay_s=20e-3))
+    fe = Frontend(rt)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}"
+    done = {}
+    th = threading.Thread(
+        target=lambda: done.setdefault(
+            "r", _stream(url, {"prompt": [3] * 8, "max_tokens": 16,
+                               "stream": True}, timeout=120)),
+        daemon=True)
+    th.start()
+    deadline = time.monotonic() + 30
+    while rt.pending() == 0 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    fe.begin_drain()                     # deterministic: 503 before shutdown
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _post(url, "/v1/completions", {"prompt": [4] * 8, "max_tokens": 2})
+    assert ei.value.code == 503
+    fe.shutdown(drain=True)
+    th.join(timeout=120)
+    toks, idxs, finish = done["r"]
+    assert finish == "length" and len(toks) == 16
+    assert fe.loop_error is None
+    assert_pools_drained(rt)
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: clock unification
+
+
+def test_ttft_non_negative_under_wall_clock_step(gqa_model, monkeypatch):
+    """Request stamps no longer mix time.time() with the monotonic event
+    loop: even if NTP steps the wall clock backwards mid-request, TTFT,
+    TPOT and E2E stay non-negative."""
+    cfg, params = gqa_model
+    # a wall clock that steps BACKWARDS by a minute on every read — the
+    # worst NTP behaviour; any serving-path caller would go negative
+    base = time.time()
+    calls = [0]
+
+    def broken_wall_clock():
+        calls[0] += 1
+        return base - 60.0 * calls[0]
+
+    monkeypatch.setattr(time, "time", broken_wall_clock)
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True,
+                        transport=InProcessTransport(default_delay_s=1e-3))
+    reqs = [Request(i, pr, max_new_tokens=4)
+            for i, pr in enumerate(random_prompts(cfg, (8, 6), seed=3))]
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
+    for r in reqs:
+        assert r.done
+        # TTFT defined on virtual-clock runs too (first_token_s populated)
+        assert r.first_token_s is not None
+        assert r.submitted_s <= r.first_token_s <= r.finished_s
+        assert r.first_token_s - r.submitted_s >= 0
+        # the virtual clock actually advanced (link delays)
+        assert r.finished_s > 0
+
+
+def test_serving_paths_never_read_wall_clock():
+    """Lint the clock-unification fix: no ``time.time()`` call may remain
+    in the request-stamping serving modules (the runtime clock is
+    monotonic-based; ``frontend`` uses time.time only for the cosmetic
+    OpenAI ``created`` field)."""
+    import inspect
+
+    from repro.serving import engine, runtime
+    for mod in (engine, runtime):
+        src = inspect.getsource(mod)
+        assert "time.time()" not in src, \
+            f"{mod.__name__} reads the non-monotonic wall clock"
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: idle vs stalled
+
+
+def test_idle_server_does_not_stall(gqa_model):
+    """An idle online server waiting for requests must NOT trip the stall
+    timer; in-flight work still must (the timer is armed only over
+    jobs/events)."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True,
+                        stall_timeout_s=0.3)
+    err = []
+
+    def loop():
+        try:
+            rt.serve_forever()
+        except BaseException as e:
+            err.append(e)
+
+    th = threading.Thread(target=loop, daemon=True)
+    th.start()
+    time.sleep(1.0)              # idle for > 3x the stall budget
+    assert th.is_alive() and not err, f"idle server stalled: {err}"
+    got = _queue.Queue()
+    req = Request(0, np.array([5, 6, 7], np.int32), max_new_tokens=3)
+    rt.submit(req, on_done=lambda r: got.put(r))
+    r = got.get(timeout=60)      # the sleeping loop wakes and serves it
+    assert r is req and r.done and len(r.output) == 3
+    rt.stop_serving()
+    th.join(timeout=30)
+    assert not th.is_alive() and not err, err
+
+
+def test_stop_serving_exits_cleanly_when_idle(gqa_model):
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True)
+    th = threading.Thread(target=rt.serve_forever, daemon=True)
+    th.start()
+    time.sleep(0.1)
+    rt.stop_serving()
+    th.join(timeout=30)
+    assert not th.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: sampling x speculation
+
+
+def test_temperature_rejected_with_draft(gqa_model):
+    """temperature > 0 with a draft attached is an explicit error (greedy
+    argmax verification would silently change the sampled distribution);
+    greedy requests on the same runtime still serve, and the front door
+    maps the rejection to HTTP 400."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    dcfg, dparams = draft_model(cfg, params)
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True,
+                        draft_cfg=dcfg, draft_params=dparams, spec_tokens=3)
+    with pytest.raises(ValueError, match="speculative"):
+        rt.submit(Request(0, np.array([1, 2, 3], np.int32),
+                          max_new_tokens=2, temperature=0.8))
+    fe = Frontend(rt)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}"
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(url, "/v1/completions",
+                  {"prompt": [1, 2, 3], "max_tokens": 2,
+                   "temperature": 0.8})
+        assert ei.value.code == 400
+        assert "speculative" in json.load(ei.value)["error"]["message"]
+        # greedy still serves speculatively on the same runtime
+        toks, idxs, finish = _stream(url, {"prompt": [1, 2, 3],
+                                           "max_tokens": 4,
+                                           "stream": True})
+        assert len(toks) == 4 and finish == "length"
+        assert rt.spec_rounds > 0
+    finally:
+        fe.shutdown(drain=True)
+        rt.shutdown()
+
+
+def test_temperature_plumbed_through_front_door(gqa_model):
+    """Without a draft, per-request temperature reaches the runtime (the
+    non-spec sampled path): temperature=0 is deterministic, and a sampled
+    request still completes with the requested token budget."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, realtime=True)
+    fe = Frontend(rt)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}"
+    try:
+        a = _stream(url, {"prompt": [9] * 6, "max_tokens": 4,
+                          "stream": True, "temperature": 0.0})
+        b = _stream(url, {"prompt": [9] * 6, "max_tokens": 4,
+                          "stream": True, "temperature": 0.0})
+        assert a[0] == b[0]               # greedy is deterministic
+        c = _stream(url, {"prompt": [9] * 6, "max_tokens": 4,
+                          "stream": True, "temperature": 0.9})
+        assert len(c[0]) == 4 and c[2] == "length"
+    finally:
+        fe.shutdown(drain=True)
+        rt.shutdown()
