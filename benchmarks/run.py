@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fault_*  beyond-paper fault tolerance (failover, straggler)
   pipelined_decode  in-flight decode window depth 1 vs 2 (latency)
   online_latency    front-door latency under open-loop load (TTFT/TPOT/SLO)
+  gpu_mix           cost/SLO-aware GPU-mix planning vs best homogeneous
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
 """
@@ -27,6 +28,7 @@ BENCHES = {}
 def _register():
     from .ablation_tables import bench_ablation_pruning, bench_ablation_warmstart
     from .fault_tables import bench_failover, bench_straggler
+    from .mix_tables import bench_gpu_mix
     from .placement_tables import bench_placement_deepdive
     from .scheduling_tables import bench_scheduling_deepdive
     from .serving_tables import (bench_direct_links,
@@ -46,6 +48,7 @@ def _register():
         "direct_links": bench_direct_links,
         "spec_decode": bench_spec_decode,
         "online_latency": bench_online_latency,
+        "gpu_mix": bench_gpu_mix,
         "fig10_placement": bench_placement_deepdive,
         "fig11_scheduling": bench_scheduling_deepdive,
         "fig12a_pruning": bench_ablation_pruning,

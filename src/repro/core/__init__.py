@@ -8,6 +8,9 @@ from .graph import (ClusterGraph, build_graph, compute_upper_bound,
                     connection_valid, placement_throughput)
 from .maxflow import FlowNetwork, max_flow, preflow_push
 from .milp import MILPOptions, PlacementResult, solve_placement
+from .mix_planner import (SLO, Bucket, MixPlan, ThroughputTable,
+                          TrafficProfile, best_homogeneous, mix_is_feasible,
+                          solve_mix)
 from .placement import (LayerRange, Placement, disaggregated_placement,
                         petals_placement, separate_pipelines_placement,
                         swarm_placement)

@@ -41,6 +41,10 @@ class DeviceProfile:
     # Max tokens the engine can batch per second regardless of layer count
     # (scheduler / engine overhead ceiling).
     max_tokens_per_s: float = 5.0e5
+    # Rental price in $/hr (on-demand cloud list-ish) — the objective the
+    # Mélange-style mix planner minimizes.  0.0 means "not priced" (free),
+    # which keeps cost-unaware callers unchanged.
+    cost_per_hour: float = 0.0
 
     def tokens_per_s(self, num_layers: int, flops_per_token_layer: float) -> float:
         if num_layers <= 0:
@@ -54,15 +58,15 @@ class DeviceProfile:
 # effective serving FLOP/s (~40% of peak fp16 dense) and full VRAM.  TPU
 # profiles are the v5e targets used for the TPU-adapted clusters.
 DEVICE_PROFILES: Dict[str, DeviceProfile] = {
-    "A100": DeviceProfile("A100", flops=312e12 * 0.40, vram_bytes=80e9, nic_bytes_per_s=1.25e9),
-    "V100": DeviceProfile("V100", flops=125e12 * 0.40, vram_bytes=32e9, nic_bytes_per_s=1.25e9),
-    "L4": DeviceProfile("L4", flops=121e12 * 0.40, vram_bytes=24e9, nic_bytes_per_s=1.25e9),
-    "T4": DeviceProfile("T4", flops=65e12 * 0.40, vram_bytes=16e9, nic_bytes_per_s=1.25e9),
+    "A100": DeviceProfile("A100", flops=312e12 * 0.40, vram_bytes=80e9, nic_bytes_per_s=1.25e9, cost_per_hour=3.67),
+    "V100": DeviceProfile("V100", flops=125e12 * 0.40, vram_bytes=32e9, nic_bytes_per_s=1.25e9, cost_per_hour=2.48),
+    "L4": DeviceProfile("L4", flops=121e12 * 0.40, vram_bytes=24e9, nic_bytes_per_s=1.25e9, cost_per_hour=0.81),
+    "T4": DeviceProfile("T4", flops=65e12 * 0.40, vram_bytes=16e9, nic_bytes_per_s=1.25e9, cost_per_hour=0.35),
     # TPU v5e chip: 197 TFLOP/s bf16 peak, 16 GB HBM.
-    "TPUv5e": DeviceProfile("TPUv5e", flops=197e12 * 0.45, vram_bytes=16e9, nic_bytes_per_s=6.25e9),
+    "TPUv5e": DeviceProfile("TPUv5e", flops=197e12 * 0.45, vram_bytes=16e9, nic_bytes_per_s=6.25e9, cost_per_hour=1.20),
     # A 4-chip v5e slice acting as one Helix node (TP within the slice).
-    "TPUv5e-4": DeviceProfile("TPUv5e-4", flops=4 * 197e12 * 0.42, vram_bytes=64e9, nic_bytes_per_s=6.25e9),
-    "TPUv5e-8": DeviceProfile("TPUv5e-8", flops=8 * 197e12 * 0.40, vram_bytes=128e9, nic_bytes_per_s=6.25e9),
+    "TPUv5e-4": DeviceProfile("TPUv5e-4", flops=4 * 197e12 * 0.42, vram_bytes=64e9, nic_bytes_per_s=6.25e9, cost_per_hour=4.80),
+    "TPUv5e-8": DeviceProfile("TPUv5e-8", flops=8 * 197e12 * 0.40, vram_bytes=128e9, nic_bytes_per_s=6.25e9, cost_per_hour=9.60),
 }
 
 
@@ -75,6 +79,9 @@ class NodeSpec:
     region: str = "r0"
     # Tensor-parallel degree inside the node (multi-GPU node / TPU slice).
     tp_degree: int = 1
+    # Per-node $/hr override; None prices the node from its device profile
+    # (tp_degree GPUs rented together).
+    hourly_cost: Optional[float] = None
 
     @property
     def flops(self) -> float:
@@ -83,6 +90,12 @@ class NodeSpec:
     @property
     def vram_bytes(self) -> float:
         return self.device.vram_bytes * self.tp_degree
+
+    @property
+    def cost_per_hour(self) -> float:
+        if self.hourly_cost is not None:
+            return self.hourly_cost
+        return self.device.cost_per_hour * self.tp_degree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +198,38 @@ class ClusterSpec:
         nodes = {k: v for k, v in self.nodes.items() if k != name}
         links = {k: v for k, v in self.links.items()
                  if name not in (k[0], k[1])}
+        return ClusterSpec(nodes=nodes, links=links,
+                           coordinator_region=self.coordinator_region)
+
+    def cost_per_hour(self) -> float:
+        """Total rental price of the cluster in $/hr (coordinator is free)."""
+        return sum(n.cost_per_hour for n in self.nodes.values())
+
+    def add_node(self, spec: NodeSpec, *,
+                 bandwidth_bytes_per_s: Optional[float] = None,
+                 latency_s: Optional[float] = None) -> "ClusterSpec":
+        """Elastic scale-up: cluster with ``spec`` added, full-mesh linked to
+        the coordinator and every existing node.  Link bandwidth/latency
+        default to the median of the existing links so a grown cluster keeps
+        the fabric it already has."""
+        if spec.name in self.nodes or spec.name == COORDINATOR:
+            raise ValueError(f"node {spec.name!r} already exists")
+        if self.links and (bandwidth_bytes_per_s is None or latency_s is None):
+            bws = sorted(l.bandwidth_bytes_per_s for l in self.links.values())
+            lats = sorted(l.latency_s for l in self.links.values())
+            if bandwidth_bytes_per_s is None:
+                bandwidth_bytes_per_s = bws[len(bws) // 2]
+            if latency_s is None:
+                latency_s = lats[len(lats) // 2]
+        bw = bandwidth_bytes_per_s if bandwidth_bytes_per_s is not None \
+            else 10e9 / 8
+        lat = latency_s if latency_s is not None else 1e-3
+        nodes = dict(self.nodes)
+        nodes[spec.name] = spec
+        links = dict(self.links)
+        for other in [COORDINATOR] + list(self.nodes):
+            links[(other, spec.name)] = LinkSpec(other, spec.name, bw, lat)
+            links[(spec.name, other)] = LinkSpec(spec.name, other, bw, lat)
         return ClusterSpec(nodes=nodes, links=links,
                            coordinator_region=self.coordinator_region)
 

@@ -129,7 +129,7 @@ def run_cluster(cfg, args) -> None:
                             realtime=True if args.serve else None,
                             **spec_kw)
     if args.serve:
-        run_frontdoor(cfg, rt, args)
+        run_frontdoor(cfg, rt, args, plan_obj=p)
         return
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=(args.prompt,)),
@@ -153,10 +153,12 @@ def run_cluster(cfg, args) -> None:
     rt.shutdown()                      # reap worker processes (socket runs)
 
 
-def run_frontdoor(cfg, rt, args) -> None:
+def run_frontdoor(cfg, rt, args, plan_obj=None) -> None:
     """Serve the runtime behind the OpenAI-compatible HTTP front door
     until SIGINT/SIGTERM, then drain gracefully and print the
     server-side TTFT/TPOT/SLO summary."""
+    import dataclasses as _dc
+
     from repro.serving.frontend import Frontend
 
     host, _, port = args.serve.rpartition(":")
@@ -165,6 +167,30 @@ def run_frontdoor(cfg, rt, args) -> None:
                   if args.slo_ttft_ms > 0 else None,
                   slo_tpot_s=args.slo_tpot_ms / 1e3
                   if args.slo_tpot_ms > 0 else None)
+    scaler = None
+    if getattr(args, "autoscale", False) and plan_obj is not None:
+        from repro.core.cluster import COORDINATOR
+        from repro.serving.autoscaler import Autoscaler
+
+        catalog = None
+        if args.autoscale_node_rate > 0:
+            # cap every device's modeled token rate so the mix planner
+            # sees a small, known per-node capacity — smoke runs on tiny
+            # CPU models would otherwise look infinitely fast on paper and
+            # never scale
+            catalog = {n.device.name:
+                       _dc.replace(n.device,
+                                   max_tokens_per_s=args.autoscale_node_rate)
+                       for name, n in rt.cluster.nodes.items()
+                       if name != COORDINATOR}
+        scaler = Autoscaler(rt, plan_obj, frontend=fe, catalog=catalog,
+                            patience=args.autoscale_patience,
+                            window_s=args.autoscale_window_s)
+        scaler.start(args.autoscale_interval_s)
+        print(f"autoscaler: interval={args.autoscale_interval_s}s "
+              f"patience={args.autoscale_patience} "
+              f"window={args.autoscale_window_s}s "
+              f"catalog={sorted(scaler.catalog)}", flush=True)
     bhost, bport = fe.serve(host or "127.0.0.1", int(port))
     print(f"serving {cfg.name} on http://{bhost}:{bport} "
           f"(POST /v1/completions, GET /healthz; SIGINT drains)",
@@ -175,7 +201,13 @@ def run_frontdoor(cfg, rt, args) -> None:
     while not stop.is_set():
         stop.wait(0.2)
     print("draining ...", flush=True)
+    if scaler is not None:
+        scaler.stop()
     fe.shutdown(drain=True)
+    if scaler is not None:
+        print("autoscale events: " + json.dumps(
+            [_dc.asdict(e) for e in scaler.events], default=float),
+            flush=True)
     print("served summary: "
           + json.dumps(fe.summary(), default=float), flush=True)
     rt.shutdown()
@@ -246,6 +278,22 @@ def main() -> None:
                          "activation frames to the next stage's worker over "
                          "peer TCP links; only tokens return to the "
                          "coordinator")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="with --serve: run the live autoscaler (mix-solve "
+                         "measured traffic, grow/shrink/reweight through "
+                         "apply_plan)")
+    ap.add_argument("--autoscale-interval-s", type=float, default=2.0,
+                    help="with --autoscale: sampling interval")
+    ap.add_argument("--autoscale-patience", type=int, default=2,
+                    help="with --autoscale: consecutive overloaded samples "
+                         "before scaling")
+    ap.add_argument("--autoscale-window-s", type=float, default=15.0,
+                    help="with --autoscale: arrival-rate trailing window")
+    ap.add_argument("--autoscale-node-rate", type=float, default=0.0,
+                    help="with --autoscale: cap each device type's modeled "
+                         "tokens/s at this value (smoke runs on tiny CPU "
+                         "models look infinitely fast to the paper-profile "
+                         "table otherwise; 0 = use real device profiles)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

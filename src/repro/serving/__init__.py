@@ -1,4 +1,5 @@
 """Serving engines: continuous batching over (partial) layer stacks."""
+from .autoscaler import Autoscaler, AutoscaleEvent
 from .engine import Engine, EngineConfig, PagedEngine, Request
 from .frontend import (Frontend, RequestStats, decode_tokens, encode_text,
                        percentiles, summarize)

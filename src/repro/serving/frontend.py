@@ -41,6 +41,7 @@ import json
 import queue as _queue
 import threading
 import time
+from collections import deque
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -166,6 +167,12 @@ class Frontend:
         self.loop_error: Optional[BaseException] = None
         self._lock = threading.Lock()
         self._next_id = 0
+        # live traffic signals for the autoscaler: arrival timestamps on
+        # the runtime clock, and completed (input_len, output_len) pairs
+        # feeding TrafficProfile.from_requests
+        self.arrivals: deque = deque(maxlen=4096)
+        self.lengths: deque = deque(maxlen=4096)
+        self.autoscaler = None       # attached by Autoscaler.attach()
         self._loop: Optional[threading.Thread] = None
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._httpd_thread: Optional[threading.Thread] = None
@@ -225,9 +232,24 @@ class Frontend:
             self._next_id += 1
             return rid
 
+    def note_arrival(self, prompt_len: int) -> None:
+        with self._lock:
+            self.arrivals.append(self.rt.clock())
+
+    def arrival_rate(self, window_s: float = 30.0) -> float:
+        """Accepted requests/s over the trailing window (runtime clock).
+        Cancelled requests stopped consuming capacity when they were torn
+        down, so arrivals — not completions — are the demand signal."""
+        now = self.rt.clock()
+        with self._lock:
+            n = sum(1 for t in self.arrivals if now - t <= window_s)
+        return n / window_s if window_s > 0 else 0.0
+
     def record(self, req: Request) -> None:
         with self._lock:
             self.stats.append(RequestStats.from_request(req))
+            self.lengths.append((int(len(req.prompt)),
+                                 max(1, len(req.output))))
 
     def summary(self) -> Dict[str, Any]:
         with self._lock:
@@ -310,12 +332,21 @@ class _Handler(BaseHTTPRequestHandler):
                 state = f"unavailable: {e}"
             status = "error" if fe.loop_error is not None else \
                 "draining" if fe.draining else "ok"
+            try:
+                pool = fe.rt.pool_pages_used()
+            except Exception:
+                pool = {}
             self._json(200 if status != "error" else 500, {
                 "status": status,
                 "model": fe.model,
                 "pending": fe.rt.pending(),
                 "completed": fe.rt.completed,
                 "tokens_produced": fe.rt.tokens_produced,
+                "cancelled_requests": fe.rt.cancelled_requests,
+                "pool_pages_used": pool,
+                "arrival_rate_rps": fe.arrival_rate(),
+                "autoscaler": (fe.autoscaler.describe()
+                               if fe.autoscaler is not None else None),
                 "error": repr(fe.loop_error) if fe.loop_error else None,
                 "state": state,
                 "metrics": fe.summary(),
@@ -370,6 +401,7 @@ class _Handler(BaseHTTPRequestHandler):
         except ValueError as e:
             self._error(400, str(e))
             return
+        fe.note_arrival(len(prompt))
         if stream:
             self._stream_response(req, ch, chat)
         else:
@@ -432,9 +464,12 @@ class _Handler(BaseHTTPRequestHandler):
             except OSError:
                 pass
         except (BrokenPipeError, ConnectionResetError):
-            # client went away: the runtime still finishes the request
-            # (no cancellation path); drain the channel so on_done's
-            # stats still record
+            # client went away: cancel so the runtime frees KV/slots on
+            # every stage node instead of decoding into a dead socket.
+            # on_done still fires (finish_reason "cancelled" — or a real
+            # finish if the request won the race), so stats record the
+            # truncated request either way.
+            fe.rt.cancel(req.request_id)
             try:
                 while True:
                     kind, val = ch.get(timeout=fe.request_timeout_s)

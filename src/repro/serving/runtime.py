@@ -333,6 +333,11 @@ class ClusterRuntime:
         self.realtime = auto if realtime is None else bool(realtime)
         self._mailbox: "_queue.Queue" = _queue.Queue()
         self._ingest: "_queue.Queue" = _queue.Queue()
+        # jobs (not control messages) sitting in _ingest: cancel markers and
+        # call_soon thunks ride the same FIFO, so qsize() would overcount
+        # pending work — this counter tracks real submissions only
+        self._ingest_jobs = 0
+        self._ingest_lock = threading.Lock()
         self._listeners: Dict[int, Tuple[Optional[Callable[[int], None]],
                                          Optional[Callable[[Request], None]]]
                               ] = {}
@@ -391,6 +396,14 @@ class ClusterRuntime:
         self.completed = 0
         # speculative in-flight passes cancelled by an early stop (eos/len)
         self.cancelled_inflight = 0
+        # client-initiated teardowns (``cancel()``): requests ended before
+        # finishing, with KV/slots released on every stage node
+        self.cancelled_requests = 0
+        # per-node decode telemetry for the autoscaler's straggler detector:
+        # cumulative wall seconds inside decode passes and tokens batched
+        # through them (written on the loop thread; readers snapshot-copy)
+        self.node_decode_s: Dict[str, float] = defaultdict(float)
+        self.node_decode_tokens: Dict[str, int] = defaultdict(int)
         # request_id -> the pipeline it was (last) served on, for
         # introspection: drivers assert multi-stage serving actually happened
         self.served: Dict[int, Any] = {}
@@ -565,23 +578,93 @@ class ClusterRuntime:
         req.submitted_s = self.clock()
         if on_token is not None or on_done is not None:
             self._listeners[req.request_id] = (on_token, on_done)
+        with self._ingest_lock:
+            self._ingest_jobs += 1
         self._ingest.put(_Job(req))
         self._mailbox.put(lambda: None)   # wake an idle serve loop
+
+    def cancel(self, request_id: int) -> None:
+        """Cancel a request from any thread (the front door calls this when
+        a streaming client disconnects).  Rides the same FIFO ingest queue
+        as ``submit``, so a cancel issued after a submit can never be
+        processed before its job has landed — the loop thread tears the
+        request down in ``_do_cancel``: epoch bump (every in-flight decode
+        pass, speculative verify round, and disaggregated KV handoff dies
+        on delivery), KV/slots released on every stage node, ``on_done``
+        fired once with ``finish_reason="cancelled"``.  Unknown or
+        already-finished ids are a no-op."""
+        self._ingest.put(("cancel", request_id))
+        self._mailbox.put(lambda: None)   # wake an idle serve loop
+
+    def call_soon(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` on the loop thread at the next step — the thread-safe
+        door through which the autoscaler applies loop-affine mutations
+        (``apply_plan``, ``update_weights``, ``fail_node``) while
+        ``serve_forever`` runs."""
+        self._ingest.put(fn)
+        self._mailbox.put(lambda: None)
 
     def pending(self) -> int:
         """Requests accepted but not finished (ingest + admission queue +
         live jobs) — the front door's 429 admission signal.  Thread-safe:
-        reads container sizes only."""
-        return self._ingest.qsize() + len(self.queue) + len(self.jobs)
+        reads container sizes and a lock-guarded counter only."""
+        with self._ingest_lock:
+            ingest = self._ingest_jobs
+        return ingest + len(self.queue) + len(self.jobs)
 
     def _drain_ingest(self) -> None:
-        """Move thread-safe submissions into the admission deque (loop
-        thread only — ``fail_node``/``apply_plan`` iterate the deque)."""
+        """Move thread-safe submissions into the admission deque and run
+        cross-thread control messages (loop thread only —
+        ``fail_node``/``apply_plan`` iterate the deque).  Everything rides
+        ONE FIFO queue so ordering across kinds is preserved: a cancel
+        enqueued after its submit always drains after the job exists."""
         while True:
             try:
-                self.queue.append(self._ingest.get_nowait())
+                item = self._ingest.get_nowait()
             except _queue.Empty:
                 return
+            if isinstance(item, _Job):
+                with self._ingest_lock:
+                    self._ingest_jobs -= 1
+                self.queue.append(item)
+            elif isinstance(item, tuple) and item and item[0] == "cancel":
+                self._do_cancel(item[1])
+            else:
+                item()               # call_soon thunk
+
+    def _do_cancel(self, request_id: int) -> None:
+        """Loop-thread teardown of a queued or live request.  The epoch
+        bump invalidates every delivery still addressed to the job —
+        decode tokens, staged activation hops, spec verify results, and
+        prefill->decode KV handoffs all check the epoch on arrival — and
+        ``_release_all`` frees slots/KV on every node holding any (all
+        decode stages, prefill-only replicas, the coordinator draft
+        engine), so pools drain even mid-handoff."""
+        job = self.jobs.pop(request_id, None)
+        if job is None:
+            for q in self.queue:
+                if q.req.request_id == request_id:
+                    job = q
+                    break
+            if job is None:
+                return               # finished or never seen: no-op
+            self.queue.remove(job)
+        req = job.req
+        if req.done:
+            return
+        self.cancelled_inflight += max(0, job.inflight)
+        job.epoch += 1
+        job.inbox = {}
+        job.kv_pending = set()
+        self._release_all(job)
+        req.done = True
+        req.finish_reason = "cancelled"
+        req.finished_s = self.clock()
+        self._vfirst.pop(request_id, None)
+        self.cancelled_requests += 1
+        cb = self._listeners.pop(request_id, None)
+        if cb is not None and cb[1] is not None:
+            cb[1](req)
 
     def _idle(self) -> bool:
         return not (self.queue or self.jobs or self._events or self._ready
@@ -676,9 +759,12 @@ class ClusterRuntime:
         describe = getattr(self.transport, "describe", None)
         extra = f" transport={describe()}" if callable(describe) else ""
         spec = self._spec_note()
-        return (f"queued={len(self.queue) + self._ingest.qsize()} "
+        with self._ingest_lock:
+            ingest = self._ingest_jobs
+        return (f"queued={len(self.queue) + ingest} "
                 f"in_flight(confirmed+window)={windows} "
                 f"pending_events={len(self._events)} ready={ready} "
+                f"cancelled_requests={self.cancelled_requests} "
                 f"now={self._now:.6f}" + (f" {spec}" if spec else "") + extra)
 
     def step(self) -> bool:
@@ -1346,10 +1432,15 @@ class ClusterRuntime:
                     nxt = (None if w["si"] == len(pipe.stages) - 1
                            else pipe.stages[w["si"] + 1].node)
                     fwds.append(self._fwd_spec(eng, nxt))
+            t_pass = time.monotonic()
             if fwds and any(f is not None for f in fwds):
                 outs = eng.decode_stage(items, fwds=fwds)
             else:
                 outs = eng.decode_stage(items)
+            # straggler telemetry: wall seconds per batched token, per node
+            self.node_decode_s[node] += time.monotonic() - t_pass
+            self.node_decode_tokens[node] += sum(
+                w.get("nt", 1) for w in batch)
             for w, out in zip(batch, outs):
                 job, si, epoch, j = w["job"], w["si"], w["epoch"], w["j"]
                 if si == len(job.pipe.stages) - 1:
@@ -1468,9 +1559,16 @@ class ClusterRuntime:
         new_assign = plan.placement.assignment
         for node in [n for n in self.engines if n not in new_assign]:
             self.fail_node(node)
+        old_assign = self.placement.assignment
+        old_roles = (self.placement.meta or {}).get("roles")
+        # install the new topology BEFORE building engines: pool sizing
+        # reads node VRAM from self.cluster, and an autoscale scale-up plan
+        # places layers on nodes that exist only in plan.cluster
+        self.cluster = plan.cluster
+        self.profile = plan.model
         changed = set()
         for node, rng in sorted(new_assign.items()):
-            if node in self.engines and self.placement.assignment.get(node) == rng:
+            if node in self.engines and old_assign.get(node) == rng:
                 continue
             changed.add(node)
             for job in list(self.jobs.values()):
@@ -1485,12 +1583,9 @@ class ClusterRuntime:
                     changed.intersection(job.route.nodes):
                 job.pipe = None
                 job.route = None
-        same = (self.placement.assignment == new_assign
-                and (self.placement.meta or {}).get("roles")
-                == (plan.placement.meta or {}).get("roles"))
-        self.cluster = plan.cluster
+        same = (old_assign == new_assign
+                and old_roles == (plan.placement.meta or {}).get("roles"))
         self.placement = plan.placement
-        self.profile = plan.model
         if same and not self.disaggregated and \
                 self.scheduler.placement.assignment == new_assign:
             self.scheduler.update_weights(plan.flows)
@@ -1506,6 +1601,21 @@ class ClusterRuntime:
         self._sync_kv(capacities=True)
 
     # -- introspection --------------------------------------------------------
+    def node_occupancy(self) -> Dict[str, float]:
+        """Per-node KV occupancy fraction (used tokens / capacity tokens) —
+        the autoscaler's saturation signal.  Nodes whose engine exposes no
+        KV accounting report 0.0."""
+        out = {}
+        for n, e in self.engines.items():
+            used = getattr(e, "kv_tokens_used", None)
+            cap = getattr(e, "kv_tokens_capacity", None)
+            if callable(used) and callable(cap):
+                c = cap()
+                out[n] = (used() / c) if c else 0.0
+            else:
+                out[n] = 0.0
+        return out
+
     def pool_pages_used(self) -> Dict[str, int]:
         out = {}
         for n, e in self.engines.items():

@@ -62,6 +62,14 @@ class Metrics:
     link_bytes: Dict[Tuple[str, str], float] = dataclasses.field(default_factory=lambda: defaultdict(float))
     restarts: int = 0
     dropped_requests: int = 0
+    # client-cancelled requests (the ``cancel`` hook — parity with
+    # ``ClusterRuntime.cancelled_requests``)
+    cancelled_requests: int = 0
+    # cluster rental price and scale/fault decisions taken during the run
+    # (parity with the live Autoscaler's event log)
+    cost_per_hour: float = 0.0
+    autoscale_events: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)
     # speculative decoding (mirrors ClusterRuntime's counters): drafts
     # proposed / accepted / rejected and verify round-trips completed
     spec_proposed: int = 0
@@ -91,6 +99,15 @@ class Metrics:
         """Prompt + decode tokens per second — comparable to the max-flow
         bound, which counts every token passing through the cluster."""
         return (self.decoded_tokens + self.prompt_tokens) / self.measure_window_s
+
+    @property
+    def dollars_per_million_tokens(self) -> float:
+        """Serving cost at the measured throughput — the mix planner's
+        objective expressed per token instead of per hour."""
+        tput = self.processed_throughput
+        if tput <= 0:
+            return float("inf")
+        return (self.cost_per_hour / 3600.0) / tput * 1e6
 
     def _stats(self, xs: List[float]) -> Dict[str, float]:
         if not xs:
@@ -266,10 +283,12 @@ class Simulator:
                                              spec.bandwidth_bytes_per_s,
                                              spec.latency_s)
 
-        self.metrics = Metrics(warmup_s=warmup_s, horizon_s=horizon_s)
+        self.metrics = Metrics(warmup_s=warmup_s, horizon_s=horizon_s,
+                               cost_per_hour=cluster.cost_per_hour())
         self._events: List = []
         self._seq = 0
         self._now = 0.0
+        self._live: Dict[int, "_ReqState"] = {}  # request_id -> state
 
     # -- event machinery ----------------------------------------------------
     def _push(self, t: float, fn: Callable, *args) -> None:
@@ -420,6 +439,7 @@ class Simulator:
                           prefill_pipeline=prefill_pipe,
                           prefill_scheduler=(self.prefill_scheduler
                                              if prefill_pipe else None))
+        self._live[req.request_id] = state
         # the prompt pass produces (and therefore "launches") the first
         # output token
         state.launched = 1
@@ -628,6 +648,7 @@ class Simulator:
         self._launch_from(COORDINATOR, state)
 
     def _complete(self, state: _ReqState) -> None:
+        self._live.pop(state.trace.request_id, None)
         if self._now >= self.warmup_s:
             self.metrics.completed_requests += 1
             if state.first_token_s is not None and state.decoded > 1:
@@ -670,6 +691,9 @@ class Simulator:
         state.inflight = 0
         state.in_pipeline = False
         state.kv_handoffs = 0        # in-flight handoffs die with the epoch
+        # deregister while reservations are released: a cancel landing in
+        # the 0.1 s retry gap must not double-release (re-arrival re-registers)
+        self._live.pop(state.trace.request_id, None)
         self.metrics.restarts += 1
         state.restarted += 1
         self._release_kv(state)
@@ -678,6 +702,7 @@ class Simulator:
             # drop pathological requests (reservations just released) —
             # counted, like the schedule-retry cap, so submitted always
             # reconciles with completed + dropped
+            self._live.pop(state.trace.request_id, None)
             self.metrics.dropped_requests += 1
             return
         retry = TraceRequest(state.trace.request_id, self._now,
@@ -701,6 +726,7 @@ class Simulator:
         stranded += [p for (*_, p) in ns.kv_wait]
         ns.pending.clear()
         ns.kv_wait.clear()
+        self.metrics.autoscale_events.append((self._now, "fail", name))
         if self.replan_fn is not None:
             new_sched, new_placement = self.replan_fn(name)
             self.scheduler = new_sched
@@ -719,6 +745,33 @@ class Simulator:
         ns = self.nodes.get(name)
         if ns is not None:
             ns.speed_factor = factor
+            self.metrics.autoscale_events.append(
+                (self._now, "slow", f"{name} x{factor}"))
+
+    def record_autoscale(self, kind: str, detail: str) -> None:
+        """Log a scale decision into the metrics (parity with the live
+        ``Autoscaler.events`` — a replan_fn that grows or shrinks the
+        cluster calls this so sim runs report the same event stream)."""
+        self.metrics.autoscale_events.append((self._now, kind, detail))
+
+    def cancel(self, t: float, request_id: int) -> None:
+        """Client-disconnect parity hook: tear the request down at ``t``
+        exactly as ``ClusterRuntime.cancel`` does — epoch bump (in-flight
+        passes and handoffs die), node KV and scheduler reservations
+        released — and count it."""
+        self._push(t, self._do_cancel, request_id)
+
+    def _do_cancel(self, request_id: int) -> None:
+        state = self._live.pop(request_id, None)
+        if state is None:
+            return                   # finished, dropped, or never arrived
+        state.epoch += 1
+        state.inflight = 0
+        state.in_pipeline = False
+        state.kv_handoffs = 0
+        self._release_kv(state)
+        self._finish_reservation(state)
+        self.metrics.cancelled_requests += 1
 
     # -- main loop ---------------------------------------------------------------
     def run(self, trace: List[TraceRequest]) -> Metrics:

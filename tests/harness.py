@@ -163,6 +163,17 @@ def serve_on_cluster(cfg, params, p, prompts, *, paged: bool,
     return rt, reqs
 
 
+def step_until(rt: ClusterRuntime, pred, max_steps: int = 2000) -> None:
+    """Step the runtime until ``pred(rt)`` holds — the hook the
+    cancellation / autoscaler tests use to catch a request at a precise
+    lifecycle point (mid-decode, mid KV handoff) before injecting."""
+    for _ in range(max_steps):
+        if pred(rt):
+            return
+        rt.step()
+    raise AssertionError(f"predicate never held within {max_steps} steps")
+
+
 def assert_pools_drained(rt: ClusterRuntime) -> None:
     """Every paged stage node must return to zero allocated pages — an
     in-flight token cancelled by eos/preemption/failover may never leak.

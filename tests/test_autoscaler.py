@@ -1,0 +1,224 @@
+"""Live autoscaling over a running ClusterRuntime, driven synchronously
+through ``Autoscaler.tick()`` on the virtual clock: a sustained load step
+must trigger a mix solve + ``apply_plan`` scale-up (incumbent nodes keep
+their layer ranges, so requests already running finish byte-identical),
+sustained underload must drain + retire the priciest redundant node, and a
+measured straggler must shift IWRR flow away via
+``reweight_for_straggler`` — its first real caller — without rebuilding
+engines or requeueing anything."""
+import dataclasses
+
+import pytest
+
+from repro.core import (COORDINATOR, LayerRange, Placement, plan,
+                        reweight_for_straggler)
+from repro.core.cluster import DEVICE_PROFILES
+from repro.core.mix_planner import Bucket, TrafficProfile
+from repro.serving import (Autoscaler, ClusterRuntime, InProcessTransport,
+                           Request)
+
+from harness import (EC, assert_pools_drained, make_cluster, make_plan,
+                     small_model)
+
+
+def _capped_a100(rate: float):
+    """An A100 whose profiled token rate is capped at ``rate`` — the same
+    knob ``launch/serve.py --autoscale-node-rate`` uses so tiny smoke
+    models don't look infinitely fast to the paper device profiles."""
+    return dataclasses.replace(DEVICE_PROFILES["A100"],
+                               max_tokens_per_s=rate)
+
+
+def _traffic(rate_rps: float) -> TrafficProfile:
+    return TrafficProfile(rate_rps=rate_rps,
+                          buckets=[Bucket(EC.prompt_len, 6)], weights=[1.0])
+
+
+# ---------------------------------------------------------------------------
+# reweight_for_straggler unit tests (satellite: the dead export gets direct
+# coverage in addition to its autoscaler caller)
+
+
+def test_reweight_shifts_flow_away_placement_unchanged():
+    """Degrading one of two identical full replicas must shift max-flow
+    toward the healthy one: same placement, less flow through the victim,
+    total throughput no higher than before."""
+    model = small_model(8)
+    cluster = make_cluster(["A100", "A100"])
+    placement = Placement({"n0": LayerRange(0, 8), "n1": LayerRange(0, 8)},
+                          8)
+    p = plan(cluster, model, placement=placement)
+    before = p.flows.get((COORDINATOR, "n1"), 0.0)
+    assert before > 0, "healthy replica drew no flow"
+    q = reweight_for_straggler(p, "n1", 0.2)
+    after = q.flows.get((COORDINATOR, "n1"), 0.0)
+    assert q.placement.assignment == p.placement.assignment
+    assert after < before
+    assert q.throughput <= p.throughput + 1e-9
+    # the healthy replica's share does not shrink
+    assert q.flows.get((COORDINATOR, "n0"), 0.0) >= \
+        p.flows.get((COORDINATOR, "n0"), 0.0) - 1e-9
+
+
+def test_reweight_rejects_unknown_node():
+    model = small_model(8)
+    cluster = make_cluster(2)
+    placement = Placement({"n0": LayerRange(0, 8), "n1": LayerRange(0, 8)},
+                          8)
+    p = plan(cluster, model, placement=placement)
+    with pytest.raises(KeyError):
+        reweight_for_straggler(p, "nope", 0.5)
+
+
+def test_straggler_reweight_applies_in_place(gqa_model, reference):
+    """Fabricated decode telemetry shows n2 running 10x slower than the
+    fleet median: the autoscaler reweights it (factor ~= median/slow),
+    placement unchanged, SAME engine objects (update_weights in place, no
+    rebuild) — and the runtime still serves byte-identical output."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 4), "n1": (0, 4), "n2": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    sc = Autoscaler(rt, p, traffic_fn=lambda: None, patience=1,
+                    min_decode_tokens=1)
+    rt.node_decode_s.update({"n0": 1.0, "n1": 1.0, "n2": 10.0})
+    rt.node_decode_tokens.update({"n0": 100, "n1": 100, "n2": 100})
+    engines_before = dict(rt.engines)
+    sc.tick()
+    assert sc._reweighted.get("n2") == pytest.approx(0.1)
+    assert any(e.kind == "straggler" for e in sc.events)
+    assert sc.plan.placement.assignment == p.placement.assignment
+    rt.step()                      # the queued apply_plan lands here
+    assert dict(rt.engines) == engines_before     # no rebuild, same objects
+    reqs = [Request(i, pr, max_new_tokens=6)
+            for i, pr in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref
+    assert_pools_drained(rt)
+    # recovery: telemetry back to fleet speed restores full capacity
+    rt.node_decode_s.update({"n0": 2.0, "n1": 2.0, "n2": 11.0})
+    rt.node_decode_tokens.update({"n0": 200, "n1": 200, "n2": 200})
+    sc.tick()
+    assert "n2" not in sc._reweighted
+    assert any("recovered" in e.detail for e in sc.events)
+
+
+# ---------------------------------------------------------------------------
+# scale-up under a load step (the acceptance-criteria live test)
+
+
+def test_scale_up_under_load_step(gqa_model, reference):
+    """Baseline traffic fits the 2-node fleet; a sustained 60 rps step does
+    not (each capped node profiles at 400 tok/s).  After ``patience``
+    overloaded ticks the autoscaler solves the mix, grows the cluster, and
+    applies the plan between steps — requests already running keep their
+    incumbent pipelines and finish byte-identical to the reference, and
+    the grown fleet then serves through the new nodes too."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        transport=InProcessTransport(default_delay_s=1e-3))
+    load = {"t": _traffic(25.0)}     # 550 tok/s: needs 2 nodes, fits 2
+    sc = Autoscaler(rt, p, catalog={"A100": _capped_a100(400.0)},
+                    patience=2, headroom=1.2, traffic_fn=lambda: load["t"])
+    assert sc.tick() is None and sc.tick() is None   # steady state: no-op
+    assert not sc.events
+
+    reqs = [Request(i, pr, max_new_tokens=6)
+            for i, pr in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r)
+    for _ in range(6):
+        rt.step()                    # requests genuinely mid-flight
+    assert rt.jobs, "nothing in flight before the load step"
+
+    load["t"] = _traffic(60.0)       # 1320 tok/s: 2 x 400 cannot serve it
+    assert sc.tick() is None         # patience: one hot tick buys nothing
+    assert sc.tick() == "scale_up"
+    assert any(e.kind == "scale_up" for e in sc.events)
+    rt.step()                        # queued apply_plan lands between steps
+
+    grown = set(rt.engines)
+    assert {"n0", "n1"} < grown      # incumbents intact, new nodes added
+    new_nodes = grown - {"n0", "n1"}
+    assert new_nodes and all(n.startswith("a100-as") for n in new_nodes)
+    for n in ("n0", "n1"):           # incumbent ranges untouched: no requeue
+        assert rt.placement.assignment[n] == p.placement.assignment[n]
+    assert rt.cluster.cost_per_hour() > p.cluster.cost_per_hour()
+
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref        # byte-identical through it
+    assert_pools_drained(rt)
+    extra = [Request(100 + i, pr, max_new_tokens=6)
+             for i, pr in enumerate(prompts)]
+    for r in extra:
+        rt.submit(r)
+    rt.run_until_done()
+    assert [r.output for r in extra] == ref
+    assert_pools_drained(rt)
+    assert sc.describe()["num_events"] == len(sc.events)
+
+
+def test_scale_up_respects_max_nodes(gqa_model):
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    sc = Autoscaler(rt, p, catalog={"A100": _capped_a100(400.0)},
+                    patience=1, max_nodes=2,
+                    traffic_fn=lambda: _traffic(60.0))
+    assert sc.tick() is None         # would need 4 nodes > max_nodes=2
+    assert any(e.kind == "error" and "max_nodes" in e.detail
+               for e in sc.events)
+    assert set(rt.cluster.nodes) - {COORDINATOR} == {"n0", "n1"}
+
+
+# ---------------------------------------------------------------------------
+# scale-down: two-phase drain + retire
+
+
+def test_drain_then_retire_redundant_node(gqa_model, reference):
+    """Three full replicas serving near-zero traffic: the autoscaler drains
+    one (flow shifted away, placement unchanged) and retires it once the
+    loop-thread probe confirms it holds no slots — survivors still serve
+    byte-identical output at strictly lower $/hr."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 4), "n1": (0, 4), "n2": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    cost_before = rt.cluster.cost_per_hour()
+    sc = Autoscaler(rt, p, catalog={"A100": _capped_a100(400.0)},
+                    patience=1, traffic_fn=lambda: _traffic(2.0))
+    assert sc.tick() == "drain"
+    victim = sc.describe()["draining"]
+    assert victim is not None
+    rt.step()                        # reweight applies; busy probe runs
+    assert sc.tick() == "retire"
+    rt.step()                        # plan without the victim applies
+    assert victim not in rt.engines
+    assert victim not in rt.cluster.nodes
+    assert rt.cluster.cost_per_hour() < cost_before
+    kinds = [e.kind for e in sc.events]
+    assert kinds.count("drain") == 1 and kinds.count("retire") == 1
+    reqs = [Request(i, pr, max_new_tokens=6)
+            for i, pr in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r)
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref
+    assert_pools_drained(rt)
+
+
+def test_no_signal_means_no_action(gqa_model):
+    """Without traffic signal the autoscaler must do nothing — an idle
+    server is not an underloaded one (arrival stats may just be warming)."""
+    cfg, params = gqa_model
+    p = make_plan(cfg, {"n0": (0, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    sc = Autoscaler(rt, p, patience=1, traffic_fn=lambda: None)
+    for _ in range(3):
+        assert sc.tick() is None
+    assert not sc.events
+    assert set(rt.cluster.nodes) - {COORDINATOR} == {"n0"}

@@ -1,0 +1,190 @@
+"""Cancel-on-disconnect: ``ClusterRuntime.cancel()`` must tear a request
+down at ANY lifecycle point — still queued, mid-decode at pipeline depth
+>= 2, with speculative verify windows in flight, or mid disaggregated
+prefill->decode KV handoff — releasing KV/slots on EVERY stage node (pools
+drain to zero, draft slots freed) while surviving requests stay
+byte-identical to the single-engine reference.  Cancellation rides the
+same ingest FIFO as ``submit`` (the front door calls it from HTTP handler
+threads), so a cancel enqueued after its submit can never be reordered
+before the job exists."""
+import numpy as np
+
+from repro.serving import ClusterRuntime, InProcessTransport, Request
+
+from harness import (EC, assert_pools_drained, draft_model, make_disagg_plan,
+                     make_plan, step_until)
+
+
+def _submit_all(rt, prompts, max_new_tokens=6, **kw):
+    reqs = [Request(i, p, max_new_tokens=max_new_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        rt.submit(r, **kw)
+    return reqs
+
+
+def test_cancel_queued_request_before_prefill(gqa_model, reference):
+    """Cancel landing while the request still sits in the admission queue:
+    it finishes as "cancelled" with no output and no token of work done;
+    everything else serves unchanged."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    reqs = _submit_all(rt, prompts)
+    rt.cancel(reqs[1].request_id)     # same FIFO: drains after the submit
+    rt.run_until_done()
+    assert reqs[1].done and reqs[1].finish_reason == "cancelled"
+    assert reqs[1].output == []
+    assert [r.output for i, r in enumerate(reqs) if i != 1] == \
+        [o for i, o in enumerate(ref) if i != 1]
+    assert rt.cancelled_requests == 1
+    assert_pools_drained(rt)
+
+
+def test_cancel_mid_decode_depth2_three_stages(gqa_model, reference):
+    """The headline case: a client vanishes mid-stream while its request is
+    decoding across a 3-stage pipeline with an in-flight window.  The
+    confirmed prefix is the greedy prefix, every stage node's pages drain,
+    survivors are byte-identical, on_done fires exactly once with
+    finish_reason="cancelled" — and the SAME runtime then serves a fresh
+    request correctly (caches uncorrupted by the torn-down passes)."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 3), "n2": (3, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        transport=InProcessTransport(default_delay_s=1e-3))
+    done = []
+    reqs = _submit_all(rt, prompts,
+                       on_done=lambda rr: done.append(rr.request_id))
+    # catch request 0 mid-decode with a speculative pass in flight
+    step_until(rt, lambda rt: 0 in rt.jobs and len(reqs[0].output) >= 1
+               and rt.jobs[0].inflight > 0)
+    rt.cancel(0)
+    rt.run_until_done()
+    assert reqs[0].done and reqs[0].finish_reason == "cancelled"
+    assert len(reqs[0].output) < len(ref[0])
+    assert reqs[0].output == ref[0][:len(reqs[0].output)]
+    assert [r.output for r in reqs[1:]] == ref[1:]
+    assert rt.cancelled_requests == 1
+    assert rt.cancelled_inflight > 0
+    assert done.count(0) == 1
+    assert sorted(done) == list(range(len(reqs)))
+    assert_pools_drained(rt)
+    extra = Request(99, prompts[0], max_new_tokens=6)
+    rt.submit(extra)
+    rt.run_until_done()
+    assert extra.output == ref[0]
+    assert_pools_drained(rt)
+
+
+def test_cancel_with_spec_windows_inflight(gqa_model, reference):
+    """Cancel while speculative verify rounds are in flight: the epoch bump
+    kills the draft window, the coordinator draft slot is freed (checked by
+    assert_pools_drained), and survivors still match the non-speculative
+    reference byte-for-byte."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    dcfg, dparams = draft_model(cfg, params)
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        draft_cfg=dcfg, draft_params=dparams, spec_tokens=3,
+                        transport=InProcessTransport(default_delay_s=1e-3))
+    reqs = _submit_all(rt, prompts)
+    step_until(rt, lambda rt: 0 in rt.jobs and rt.jobs[0].inflight > 0)
+    rt.cancel(0)
+    rt.run_until_done()
+    assert reqs[0].finish_reason == "cancelled"
+    assert [r.output for r in reqs[1:]] == ref[1:]
+    assert rt.spec_rounds > 0
+    assert rt.cancelled_requests == 1
+    assert_pools_drained(rt)          # page pools AND draft slots
+
+
+def test_cancel_during_disagg_kv_handoff(gqa_model, reference):
+    """Cancel while the prefill replica is still shipping KV to the decode
+    replica (``kv_pending`` non-empty): the handoff is dropped on delivery,
+    pages release on BOTH replicas, and the other requests decode to
+    byte-identical outputs."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_disagg_plan(cfg, {"n0": (0, 4)}, {"n1": (0, 2), "n2": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        transport=InProcessTransport(default_delay_s=2e-3))
+    reqs = _submit_all(rt, prompts)
+    step_until(rt, lambda rt: any(j.kv_pending for j in rt.jobs.values()))
+    victim = next(j for j in rt.jobs.values() if j.kv_pending)
+    rid = victim.req.request_id
+    rt.cancel(rid)
+    rt.run_until_done()
+    assert victim.req.finish_reason == "cancelled"
+    assert [r.output for r in reqs if r.request_id != rid] == \
+        [ref[r.request_id] for r in reqs if r.request_id != rid]
+    assert rt.cancelled_requests == 1
+    assert_pools_drained(rt)
+
+
+def test_cancel_unknown_or_finished_is_noop(gqa_model, reference):
+    """Cancelling an id that never existed, or one that already finished,
+    changes nothing — no counter bump, no finish_reason rewrite."""
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True)
+    reqs = _submit_all(rt, prompts[:2])
+    rt.run_until_done()
+    assert [r.output for r in reqs] == ref[:2]
+    rt.cancel(reqs[0].request_id)     # already finished
+    rt.cancel(424242)                 # never seen
+    rt.step()                         # drain the control messages
+    assert rt.cancelled_requests == 0
+    assert reqs[0].finish_reason != "cancelled"
+    assert_pools_drained(rt)
+
+
+def test_cancel_from_other_thread_while_serving(gqa_model, reference):
+    """The real front-door shape: ``cancel`` called from another thread
+    while the loop thread steps — lands through the ingest queue without
+    corrupting the admission deque mid-iteration."""
+    import threading
+
+    cfg, params = gqa_model
+    prompts, ref = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        transport=InProcessTransport(default_delay_s=1e-3))
+    reqs = _submit_all(rt, prompts)
+    step_until(rt, lambda rt: 0 in rt.jobs and len(reqs[0].output) >= 1)
+    th = threading.Thread(target=rt.cancel, args=(0,))
+    th.start()
+    th.join()
+    rt.run_until_done()
+    assert reqs[0].finish_reason == "cancelled"
+    assert [r.output for r in reqs[1:]] == ref[1:]
+    assert rt.cancelled_requests == 1
+    assert_pools_drained(rt)
+
+
+def test_simulator_cancel_parity(gqa_model):
+    """The event simulator's disconnect hook mirrors the runtime teardown:
+    a cancelled request frees its KV + scheduler reservation, counts in
+    ``cancelled_requests``, and the rest of the trace completes."""
+    from repro.core import MILPOptions, plan
+    from repro.sim import Simulator
+    from repro.sim.traces import TraceRequest
+
+    from harness import make_cluster, small_model
+
+    model = small_model(8)
+    cluster = make_cluster(["A100", "A100"])
+    p = plan(cluster, model, MILPOptions(time_limit_s=5.0, lns_rounds=0,
+                                         fgls_rounds=10))
+    sim = Simulator(cluster, model, p.placement, p.make_scheduler(),
+                    warmup_s=0.0, horizon_s=300.0, decode_chunk=4)
+    trace = [TraceRequest(i, 0.05 * i, 64, 256) for i in range(6)]
+    sim.cancel(1.0, 0)                # mid-decode for request 0
+    sim.cancel(1.0, 999)              # unknown id: no-op
+    m = sim.run(trace)
+    assert m.cancelled_requests == 1
+    assert m.completed_requests == len(trace) - 1
+    assert m.dropped_requests == 0

@@ -232,6 +232,72 @@ def test_graceful_drain(gqa_model):
 
 
 # ---------------------------------------------------------------------------
+# bugfix: cancel-on-disconnect
+
+
+def test_mid_stream_disconnect_cancels_and_frees(gqa_model, reference):
+    """A streaming client that slams its socket shut mid-generation must
+    cancel the request in the runtime — ``cancelled_requests`` increments,
+    KV pages free on every stage node — while another stream in flight
+    finishes byte-identical to the offline reference."""
+    import socket
+    import struct
+
+    cfg, params = gqa_model
+    prompts, refs = reference
+    p = make_plan(cfg, {"n0": (0, 2), "n1": (2, 4)})
+    rt = ClusterRuntime(cfg, params, p, EC, paged=True, max_inflight=2,
+                        realtime=True,
+                        transport=InProcessTransport(default_delay_s=5e-3))
+    fe = Frontend(rt, max_pending=8)
+    host, port = fe.serve("127.0.0.1", 0)
+    url = f"http://{host}:{port}"
+    try:
+        done = {}
+        th = threading.Thread(
+            target=lambda: done.setdefault(
+                "r", _stream(url, {"prompt": [int(t) for t in prompts[0]],
+                                   "max_tokens": 6, "stream": True},
+                             timeout=120)), daemon=True)
+        th.start()
+        # raw socket: long stream, read a couple of SSE chunks, then RST
+        body = json.dumps({"prompt": [7] * 8, "max_tokens": 30,
+                           "stream": True}).encode()
+        s = socket.create_connection((host, port), timeout=60)
+        s.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: x\r\n"
+                  b"Content-Type: application/json\r\n" +
+                  f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        buf = b""
+        while buf.count(b"data: ") < 2:     # tokens genuinely streamed
+            chunk = s.recv(4096)
+            assert chunk, "server closed the stream early"
+            buf += chunk
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     struct.pack("ii", 1, 0))    # RST on close
+        s.close()
+        # the handler notices on its next chunk write and cancels
+        deadline = time.monotonic() + 60
+        while rt.cancelled_requests == 0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert rt.cancelled_requests == 1, "disconnect did not cancel"
+        th.join(timeout=120)
+        assert done["r"][0] == refs[0]      # survivor byte-identical
+        assert done["r"][2] == "length"
+        deadline = time.monotonic() + 10
+        while rt.pending() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert_pools_drained(rt)            # no page leaked on any node
+        with urllib.request.urlopen(url + "/healthz", timeout=30) as r:
+            h = json.load(r)
+        assert h["cancelled_requests"] == 1
+        assert all(v == 0 for v in h["pool_pages_used"].values())
+    finally:
+        fe.shutdown(drain=True)
+        rt.shutdown()
+    assert fe.loop_error is None
+
+
+# ---------------------------------------------------------------------------
 # bugfix regressions: clock unification
 
 
